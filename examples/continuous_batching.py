@@ -1,0 +1,89 @@
+"""Continuous batching demo — the paper's block-wise dataflow for serving.
+
+Drives the REAL slot engine (per-slot KV positions) on a smoke model:
+finished requests hand their slot to the next queued request immediately,
+while static batching waits for the slowest request in the batch (the
+synchronization barrier the paper breaks).
+
+  PYTHONPATH=src python examples/continuous_batching.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.distrib.context import set_mesh
+from repro.models import init_params
+from repro.serve.engine import init_slot_state, reset_slots, slot_decode_step
+from repro.serve.scheduler import (
+    WorkloadConfig,
+    sample_lengths,
+    simulate_continuous,
+    simulate_static,
+)
+
+
+def run_engine(cfg, params, lengths, n_slots, max_seq):
+    """Greedy-decode every request with continuous slot refill."""
+    queue = list(range(len(lengths)))[::-1]  # FIFO (matches the analytic sim)
+    remaining = {i: int(l) for i, l in enumerate(lengths)}
+    slot_req = [-1] * n_slots
+    state = init_slot_state(cfg, n_slots, max_seq, dtype=jnp.float32)
+    tok = jnp.zeros((n_slots,), jnp.int32)
+    done, steps = 0, 0
+    while done < len(lengths):
+        refill = jnp.asarray(
+            [
+                slot_req[s] == -1
+                or (slot_req[s] >= 0 and remaining[slot_req[s]] == 0)
+                for s in range(n_slots)
+            ]
+        )
+        if bool(refill.any()):
+            state = reset_slots(state, refill)
+            for s in range(n_slots):
+                if bool(refill[s]):
+                    if slot_req[s] != -1:
+                        pass
+                    slot_req[s] = queue.pop() if queue else -2
+        logits, state = slot_decode_step(params, cfg, state, tok)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        steps += 1
+        for s in range(n_slots):
+            r = slot_req[s]
+            if r >= 0:
+                remaining[r] -= 1
+                if remaining[r] == 0:
+                    done += 1
+                    slot_req[s] = -1
+        if steps > 10_000:
+            raise RuntimeError("runaway")
+    return steps
+
+
+def main():
+    set_mesh(None)
+    cfg = get_config("glm4-9b", smoke=True).with_(dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    lengths = sample_lengths(WorkloadConfig(n_requests=24, mean_len=12, sigma=1.0, seed=3))
+    lengths = np.minimum(lengths, 30)
+    n_slots = 4
+
+    st = simulate_static(lengths, n_slots)
+    ct = simulate_continuous(lengths, n_slots)
+    print(f"analytic: static util={st.utilization:.2f} steps={st.total_steps}  "
+          f"continuous util={ct.utilization:.2f} steps={ct.total_steps} "
+          f"({st.total_steps/ct.total_steps:.2f}x)")
+
+    t0 = time.time()
+    steps = run_engine(cfg, params, lengths, n_slots, max_seq=32)
+    print(f"engine:   continuous completed {len(lengths)} requests in {steps} "
+          f"decode steps ({time.time()-t0:.1f}s wall) — analytic predicted {ct.total_steps}")
+    assert abs(steps - ct.total_steps) <= n_slots, (steps, ct.total_steps)
+
+
+if __name__ == "__main__":
+    main()

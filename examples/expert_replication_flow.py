@@ -1,0 +1,122 @@
+"""The paper's full workflow, end-to-end on a REAL MoE:
+
+  1. train a small DeepSeek-family MoE until the router develops preferences,
+  2. PROFILE the routing distribution (the paper's 'profile the distribution
+     of ones ... from a large set of examples' — here: expert-selection
+     histograms captured from eager forward passes),
+  3. run the paper's greedy allocator to PLAN hot-expert replication under a
+     physical-slot budget,
+  4. REDEPLOY with the replication baked in and measure the barrier relief
+     (expected max slot load / token drop rate).
+
+  PYTHONPATH=src python examples/expert_replication_flow.py
+"""
+
+import dataclasses
+import json
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.alloc.expert import (
+    drop_rate,
+    expected_max_load,
+    plan_replication,
+)
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.distrib.context import set_mesh
+from repro.models import forward, init_params, loss_fn
+from repro.models.layers import capture_routing
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.train.step import make_train_step
+
+
+def main():
+    set_mesh(None)
+    cfg = get_config("deepseek-v2-236b", smoke=True)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    opt = AdamWConfig(lr=2e-3, warmup_steps=5, total_steps=60)
+    opt_state = adamw_init(params)
+    step = jax.jit(make_train_step(cfg, opt))
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=8))
+
+    # 1. train — routers drift away from uniform
+    for s in range(40):
+        params, opt_state, m = step(params, opt_state, data.batch(s))
+    print(f"trained 40 steps, loss={float(m['loss']):.3f}")
+
+    # 2. profile routing on held-out batches.  jax.lax.scan traces its body
+    # (capture needs concrete values), so the profiler walks the layer stack
+    # in a python loop — profiling is offline and CPU-cheap by design.
+    import jax.numpy as jnp
+    from repro.models.lm import _block_fwd
+
+    with capture_routing() as records:
+        for s in range(100, 104):
+            toks = data.batch(s)["tokens"]
+            x = params["embed"].astype(jnp.dtype(cfg.dtype))[toks]
+            pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
+            for i in range(cfg.n_layers):
+                p_l = jax.tree.map(lambda a, i=i: a[i], params["layers"])
+                x, _ = _block_fwd(p_l, cfg, x, pos, None)
+    eids = np.concatenate([r.reshape(-1) for r in records])
+    hist = np.bincount(eids, minlength=cfg.moe.n_experts).astype(np.float64)
+    hist /= hist.sum()
+    print(f"profiled {eids.size} routings across {len(records)} MoE calls; "
+          f"hottest expert carries {hist.max()*100:.1f}% (uniform would be "
+          f"{100/cfg.moe.n_experts:.1f}%)")
+
+    # 3. plan replication: pad 8 experts to 12 physical slots
+    plan = plan_replication(hist, slot_budget=12)
+    print(f"replication plan: {plan.replication} -> {plan.n_physical} slots, "
+          f"balance {plan.balance:.2f}")
+
+    # 4. barrier relief, measured against the profiled distribution
+    n_tok, k = 4096, cfg.moe.top_k
+    base_max = expected_max_load(hist, n_tok, k)
+    repl_max = expected_max_load(plan, n_tok, k)
+    base_drop = drop_rate(hist, n_tok, k, cfg.moe.capacity_factor)
+    repl_drop = drop_rate(plan, n_tok, k, cfg.moe.capacity_factor)
+    print(json.dumps({
+        "max_slot_load": {"base": round(base_max), "replicated": round(repl_max),
+                          "relief": f"{base_max/repl_max:.2f}x"},
+        "drop_rate": {"base": f"{base_drop*100:.2f}%",
+                      "replicated": f"{repl_drop*100:.2f}%"},
+    }, indent=1))
+
+    # 5. redeploy: the plan bakes into the config; the distributed dispatch
+    # (moe_fwd) routes round-robin over replicas of each logical expert.
+    cfg_repl = cfg.with_(moe=dataclasses.replace(cfg.moe, replication=plan.replication))
+    logits, _ = forward(params_with_replicas(params, cfg, plan), cfg_repl,
+                        data.batch(200)["tokens"])
+    assert bool(jax.numpy.isfinite(logits.astype(jax.numpy.float32)).all())
+    print("redeployed with replicated experts: forward OK")
+
+
+def params_with_replicas(params, cfg, plan):
+    """Expand the physical expert bank according to the plan (replicas are
+    exact copies — the paper's weight duplication)."""
+    import jax.numpy as jnp
+
+    idx = np.concatenate(
+        [np.full(r, e) for e, r in enumerate(plan.replication)]
+    )
+
+    def expand(leaf_path, leaf):
+        return leaf
+
+    new = jax.tree_util.tree_map_with_path(
+        lambda path, leaf: (
+            leaf[:, jnp.asarray(idx)]
+            if any(getattr(p, "key", "") == "experts" for p in path)
+            else leaf
+        ),
+        params,
+    )
+    return new
+
+
+if __name__ == "__main__":
+    main()

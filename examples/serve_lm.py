@@ -1,0 +1,24 @@
+"""Batched serving example: prefill + cached decode for any architecture.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch deepseek-v2-236b
+  PYTHONPATH=src python examples/serve_lm.py --arch mamba2-370m --gen 64
+
+Uses the smoke config on CPU; production shapes go through
+repro.launch.dryrun / repro.launch.serve.
+"""
+
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    serve_main(["--arch", args.arch, "--smoke", "--gen", str(args.gen)])
+
+
+if __name__ == "__main__":
+    main()

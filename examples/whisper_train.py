@@ -1,0 +1,62 @@
+"""Enc-dec (Whisper-family) training example: stub audio frontend, synthetic
+paired (frames -> tokens) data, a few fault-tolerant steps on CPU.
+
+  PYTHONPATH=src python examples/whisper_train.py --steps 10
+"""
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.distrib.context import set_mesh
+from repro.models import encdec
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.runtime.fault import RunnerConfig, TrainRunner
+from repro.train.step import make_encdec_train_step
+
+
+def synth_batch(cfg, step, batch=2, seq=24):
+    """Frames carry a per-example bias; targets encode that bias — a
+    learnable audio->token mapping."""
+    rng = np.random.default_rng(step)
+    cls = rng.integers(0, 8, size=(batch,))
+    frames = rng.normal(0, 1, size=(batch, cfg.encoder_seq, cfg.d_model)) * 0.1
+    frames += cls[:, None, None] * 0.3
+    toks = np.stack([np.full((seq + 1,), 5 + c, dtype=np.int32) for c in cls])
+    return {
+        "frames": jnp.asarray(frames, jnp.float32),
+        "tokens": jnp.asarray(toks[:, :-1]),
+        "targets": jnp.asarray(toks[:, 1:]),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--ckpt", default="/tmp/repro_whisper")
+    args = ap.parse_args()
+
+    cfg = get_config("whisper-medium", smoke=True)
+    set_mesh(None)
+    params = encdec.init_encdec_params(cfg, jax.random.PRNGKey(0))
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=args.steps)
+    opt_state = adamw_init(params)
+    step_fn = jax.jit(make_encdec_train_step(cfg, opt))
+    runner = TrainRunner(
+        RunnerConfig(ckpt_dir=args.ckpt, ckpt_every=5),
+        step_fn,
+        lambda s: synth_batch(cfg, s),
+        fingerprint="whisper-smoke",
+    )
+    params, opt_state = runner.run(params, opt_state, args.steps)
+    losses = [h.metrics["loss"] for h in runner.history]
+    print(json.dumps({"first": round(losses[0], 3), "last": round(losses[-1], 3)}))
+    assert losses[-1] < losses[0], "enc-dec did not learn the synthetic mapping"
+
+
+if __name__ == "__main__":
+    main()

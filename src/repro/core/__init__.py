@@ -1,0 +1,1 @@
+"""Core: the paper's contribution (cim, alloc) + roofline/HLO analysis."""

@@ -1,0 +1,6 @@
+"""Generalized allocation algorithms shared by the CIM simulator and the
+distributed runtime."""
+
+from .greedy import AllocationResult, greedy_allocate, proportional_allocate
+
+__all__ = ["AllocationResult", "greedy_allocate", "proportional_allocate"]

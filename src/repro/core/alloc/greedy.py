@@ -1,0 +1,145 @@
+"""Greedy latency-proportional replica allocation.
+
+This is the paper's core algorithm (Section III-B), factored out so that it is
+shared verbatim between:
+
+  * the CIM simulator (units = blocks of crossbar arrays, cost = arrays), and
+  * the distributed runtime (units = MoE experts / pipeline stages, cost =
+    HBM bytes or device slots).
+
+The paper describes a linear-time loop: "While we have free (not allocated)
+arrays, we loop through and allocate arrays to the block with the highest
+expected latency. Once we run out of arrays or the number of arrays left over
+is not enough to allocate to the slowest block we have found the optimal
+allocation."  We implement it with a max-heap (O(N log N)); the result is
+identical to the paper's linear scan.
+"""
+
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = ["AllocationResult", "greedy_allocate", "proportional_allocate"]
+
+
+@dataclass(frozen=True)
+class AllocationResult:
+    """Replica counts chosen by the allocator.
+
+    Attributes:
+      replicas:    int array, replicas granted per unit (>= 1 each).
+      latency:     float array, resulting expected latency per unit
+                   (base_latency / replicas).
+      spent:       total cost consumed.
+      leftover:    budget remaining when the loop stopped.
+    """
+
+    replicas: np.ndarray
+    latency: np.ndarray
+    spent: float
+    leftover: float
+
+    @property
+    def makespan(self) -> float:
+        return float(self.latency.max()) if self.latency.size else 0.0
+
+
+def greedy_allocate(
+    base_latency: np.ndarray,
+    unit_cost: np.ndarray,
+    budget: float,
+    *,
+    initial_replicas: np.ndarray | None = None,
+) -> AllocationResult:
+    """Grant replicas to the unit with the highest expected latency.
+
+    Args:
+      base_latency: expected latency of each unit with a single replica
+        (e.g. expected cycles for a block to process its share of work).
+      unit_cost: cost of one additional replica of each unit (e.g. arrays per
+        block row, HBM bytes per expert copy).
+      budget: total cost available for *additional* replicas (the mandatory
+        first copy of each unit is assumed already placed and not billed).
+      initial_replicas: optionally start from an existing allocation.
+
+    Stops when the current slowest unit can no longer be afforded, mirroring
+    the paper's stopping rule.
+    """
+    base_latency = np.asarray(base_latency, dtype=np.float64)
+    unit_cost = np.asarray(unit_cost, dtype=np.float64)
+    if base_latency.shape != unit_cost.shape:
+        raise ValueError(
+            f"base_latency {base_latency.shape} vs unit_cost {unit_cost.shape}"
+        )
+    n = base_latency.size
+    replicas = (
+        np.ones(n, dtype=np.int64)
+        if initial_replicas is None
+        else np.asarray(initial_replicas, dtype=np.int64).copy()
+    )
+    if n == 0:
+        return AllocationResult(replicas, base_latency.copy(), 0.0, budget)
+    if np.any(replicas < 1):
+        raise ValueError("every unit needs at least one replica")
+
+    # Max-heap keyed by current expected latency.
+    heap = [(-base_latency[i] / replicas[i], i) for i in range(n)]
+    heapq.heapify(heap)
+    spent = 0.0
+    remaining = float(budget)
+    while heap:
+        neg_lat, i = heapq.heappop(heap)
+        if unit_cost[i] > remaining:
+            # Paper's stopping rule: if the slowest unit cannot be afforded,
+            # the allocation is final (do not skip to cheaper, faster units —
+            # they would not reduce the makespan anyway).
+            heapq.heappush(heap, (neg_lat, i))
+            break
+        remaining -= unit_cost[i]
+        spent += unit_cost[i]
+        replicas[i] += 1
+        heapq.heappush(heap, (-base_latency[i] / replicas[i], i))
+
+    latency = base_latency / replicas
+    return AllocationResult(replicas, latency, spent, remaining)
+
+
+def proportional_allocate(
+    weight: np.ndarray,
+    unit_cost: np.ndarray,
+    budget: float,
+) -> AllocationResult:
+    """Allocate replicas proportional to `weight` (the prior-work policy).
+
+    This is "weight-based" allocation when `weight` = MACs per layer and
+    "performance-based layer-wise" when `weight` = expected cycles per layer.
+    Replica counts are the floor of the proportional share (>= 1), with any
+    leftover budget distributed by largest fractional remainder.
+    """
+    weight = np.asarray(weight, dtype=np.float64)
+    unit_cost = np.asarray(unit_cost, dtype=np.float64)
+    n = weight.size
+    replicas = np.ones(n, dtype=np.int64)
+    if n == 0 or budget <= 0:
+        return AllocationResult(replicas, weight / replicas, 0.0, float(budget))
+
+    total_w = weight.sum()
+    # Ideal fractional share of the budget, in cost units, then converted to
+    # whole replicas of each unit.
+    share = weight / total_w * float(budget)
+    extra = np.floor(share / unit_cost).astype(np.int64)
+    replicas = replicas + np.maximum(extra, 0)
+    spent = float((extra * unit_cost).sum())
+    remaining = float(budget) - spent
+    # Largest-remainder top-up.
+    frac = share / unit_cost - extra
+    for i in np.argsort(-frac):
+        if unit_cost[i] <= remaining:
+            replicas[i] += 1
+            remaining -= unit_cost[i]
+            spent += unit_cost[i]
+    latency = weight / replicas
+    return AllocationResult(replicas, latency, spent, remaining)

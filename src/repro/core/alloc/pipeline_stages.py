@@ -1,0 +1,59 @@
+"""Cost-based pipeline-stage partitioning — the paper's performance-based
+layer-wise allocation applied to pipeline parallelism.
+
+Prior-work analogue ("weight-based"): split L layers into P stages with
+equal LAYER COUNTS.  Paper analogue ("performance-based"): split so that
+per-stage COST (profiled per-layer step cost — FLOPs from the dry-run, or
+measured step times) is balanced, because the pipeline runs at the speed of
+the slowest stage.
+
+`partition_stages` is the classic linear-partition DP (O(L^2 P)), exact."""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["partition_stages", "stage_costs", "bottleneck"]
+
+
+def partition_stages(costs: np.ndarray, n_stages: int) -> list[tuple[int, int]]:
+    """Split layers [0, L) into contiguous stages minimizing max stage cost.
+
+    Returns [(start, end), ...] half-open ranges, len == n_stages."""
+    costs = np.asarray(costs, dtype=np.float64)
+    L = costs.size
+    if n_stages >= L:
+        return [(i, i + 1) for i in range(L)] + [(L, L)] * (n_stages - L)
+    prefix = np.concatenate([[0.0], np.cumsum(costs)])
+
+    def seg(i, j):  # cost of layers [i, j)
+        return prefix[j] - prefix[i]
+
+    # dp[p][j] = minimal bottleneck for first j layers in p stages
+    dp = np.full((n_stages + 1, L + 1), np.inf)
+    cut = np.zeros((n_stages + 1, L + 1), dtype=np.int64)
+    dp[0][0] = 0.0
+    for p in range(1, n_stages + 1):
+        for j in range(1, L + 1):
+            for i in range(p - 1, j):
+                val = max(dp[p - 1][i], seg(i, j))
+                if val < dp[p][j]:
+                    dp[p][j] = val
+                    cut[p][j] = i
+    # walk back
+    bounds = []
+    j = L
+    for p in range(n_stages, 0, -1):
+        i = int(cut[p][j])
+        bounds.append((i, j))
+        j = i
+    return list(reversed(bounds))
+
+
+def stage_costs(costs: np.ndarray, stages: list[tuple[int, int]]) -> np.ndarray:
+    costs = np.asarray(costs, dtype=np.float64)
+    return np.asarray([costs[a:b].sum() for a, b in stages])
+
+
+def bottleneck(costs: np.ndarray, stages: list[tuple[int, int]]) -> float:
+    return float(stage_costs(costs, stages).max())

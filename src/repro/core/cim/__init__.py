@@ -1,0 +1,35 @@
+"""Faithful reproduction of the paper's CIM evaluation stack."""
+
+from .cost import (
+    ArrayConfig,
+    DEFAULT_ARRAY,
+    baseline_cycles,
+    bitplane_ones,
+    expected_cycles_from_density,
+    zskip_cycles,
+)
+from .network import LayerSpec, NetworkSpec, resnet18_imagenet, vgg11_cifar10
+from .profile import NetworkProfile, LayerProfile, profile_network, synthetic_images
+from .simulate import Allocation, SimResult, allocate, run_policy, simulate
+
+__all__ = [
+    "ArrayConfig",
+    "DEFAULT_ARRAY",
+    "baseline_cycles",
+    "bitplane_ones",
+    "expected_cycles_from_density",
+    "zskip_cycles",
+    "LayerSpec",
+    "NetworkSpec",
+    "resnet18_imagenet",
+    "vgg11_cifar10",
+    "NetworkProfile",
+    "LayerProfile",
+    "profile_network",
+    "synthetic_images",
+    "Allocation",
+    "SimResult",
+    "allocate",
+    "run_policy",
+    "simulate",
+]

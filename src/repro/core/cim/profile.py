@@ -1,0 +1,207 @@
+"""Input-statistics profiling (Section III-A, "profile the distribution of
+'1's in the activations gathered from a large set of examples run on a GPU").
+
+We run the actual quantized network forward in JAX (CPU here), collect the
+uint8 im2col patch matrices that would be applied to the crossbar word lines,
+and derive per-block '1'-bit densities plus sampled per-(patch, block) cycle
+counts for the simulator.
+
+Inputs are synthetic-but-structured images (low-frequency random fields +
+noise) — the distributional knobs the paper relies on (ReLU sparsity, per-
+layer density spread) emerge from the network itself, not the dataset.  The
+measured speedups are reported against our own profile in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .cost import ArrayConfig, DEFAULT_ARRAY, zskip_cycles, baseline_cycles
+from .network import NetworkSpec, LayerSpec
+
+__all__ = ["LayerProfile", "NetworkProfile", "profile_network", "synthetic_images"]
+
+
+@dataclass(frozen=True)
+class LayerProfile:
+    name: str
+    block_density: np.ndarray  # (B,) mean '1'-bit density per block
+    mean_cycles: np.ndarray  # (B,) E[zskip cycles] per block per patch
+    cycles_sample: np.ndarray  # (S, B) sampled per-patch per-block cycles
+    baseline_block_cycles: np.ndarray  # (B,) constant cycles without zskip
+    patches_per_image: int
+
+    @property
+    def density(self) -> float:
+        return float(self.block_density.mean())
+
+
+@dataclass(frozen=True)
+class NetworkProfile:
+    network: str
+    layers: tuple[LayerProfile, ...]
+
+
+def synthetic_images(n: int, hw: int, key: jax.Array, channels: int = 3) -> jax.Array:
+    """Low-frequency random fields + noise, normalized to [0, 1]."""
+    k1, k2 = jax.random.split(key)
+    coarse = jax.random.uniform(k1, (n, 8, 8, channels))
+    smooth = jax.image.resize(coarse, (n, hw, hw, channels), method="cubic")
+    noisy = smooth + 0.08 * jax.random.normal(k2, (n, hw, hw, channels))
+    lo = noisy.min(axis=(1, 2, 3), keepdims=True)
+    hi = noisy.max(axis=(1, 2, 3), keepdims=True)
+    return (noisy - lo) / (hi - lo + 1e-9)
+
+
+def _quantize_u8(x: jax.Array) -> tuple[np.ndarray, float]:
+    """Per-tensor uint8 quantization of a non-negative activation tensor."""
+    scale = float(jnp.max(x)) / 255.0 + 1e-12
+    q = np.asarray(jnp.clip(jnp.round(x / scale), 0, 255), dtype=np.uint8)
+    return q, scale
+
+
+def _im2col(x: jax.Array, layer: LayerSpec) -> jax.Array:
+    """(N,H,W,C) -> (P, rows) patch matrix for this conv layer."""
+    pad = "SAME" if layer.kernel > 1 else "VALID"
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        (layer.kernel, layer.kernel),
+        (layer.stride, layer.stride),
+        pad,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # (N, H', W', C*k*k)
+    rows = patches.shape[-1]
+    assert rows == layer.rows, (rows, layer.rows, layer.name)
+    return patches.reshape(-1, rows)
+
+
+def _kaiming(key: jax.Array, rows: int, cout: int) -> jax.Array:
+    return jax.random.normal(key, (rows, cout)) * np.sqrt(2.0 / rows)
+
+
+def _bn_relu(y: jax.Array) -> jax.Array:
+    mu = y.mean(axis=tuple(range(y.ndim - 1)), keepdims=True)
+    sd = y.std(axis=tuple(range(y.ndim - 1)), keepdims=True) + 1e-5
+    return jax.nn.relu((y - mu) / sd)
+
+
+class _Profiler:
+    """Runs a conv stack layer-by-layer, recording crossbar input stats."""
+
+    def __init__(
+        self,
+        spec: NetworkSpec,
+        key: jax.Array,
+        sample_patches: int,
+        array: ArrayConfig = DEFAULT_ARRAY,
+    ):
+        self.spec = spec
+        self.array = array
+        self.sample = sample_patches
+        self.records: dict[int, LayerProfile] = {}
+        keys = jax.random.split(key, len(spec.layers))
+        self.weights = {
+            i: _kaiming(keys[i], l.rows, l.cout) for i, l in enumerate(spec.layers)
+        }
+        self.rng = np.random.default_rng(0)
+
+    def conv(self, idx: int, x: jax.Array) -> jax.Array:
+        """Quantize -> record stats -> matmul -> reshape to (N,H',W',Cout)."""
+        layer = self.spec.layers[idx]
+        pat = _im2col(x, layer)  # (P, rows) float
+        q, scale = _quantize_u8(jax.nn.relu(pat))
+        self._record(idx, layer, q)
+        y = (q.astype(np.float32) * scale) @ np.asarray(self.weights[idx])
+        n = x.shape[0]
+        return jnp.asarray(y).reshape(n, layer.out_hw, layer.out_hw, layer.cout)
+
+    def _record(self, idx: int, layer: LayerSpec, q: np.ndarray) -> None:
+        P = q.shape[0]
+        take = min(self.sample, P)
+        sel = self.rng.choice(P, size=take, replace=False)
+        qs = q[sel]  # (S, rows)
+        slices = layer.block_row_slices()
+        dens, cyc_cols, base = [], [], []
+        bits_full = np.unpackbits(q[..., None], axis=-1)  # (P, rows, 8)
+        for sl in slices:
+            rows_here = sl.stop - sl.start
+            dens.append(bits_full[:, sl, :].mean())
+            cyc_cols.append(zskip_cycles(qs[:, sl], self.array))
+            base.append(baseline_cycles(rows_here, self.array))
+        cyc = np.stack(cyc_cols, axis=-1)  # (S, B)
+        self.records[idx] = LayerProfile(
+            name=layer.name,
+            block_density=np.asarray(dens),
+            mean_cycles=cyc.mean(axis=0),
+            cycles_sample=cyc,
+            baseline_block_cycles=np.asarray(base, dtype=np.int64),
+            patches_per_image=layer.patches_per_image,
+        )
+
+
+def _forward_resnet18(p: _Profiler, x: jax.Array) -> jax.Array:
+    """ResNet18 topology over the 20-layer spec (residuals included)."""
+    x = _bn_relu(p.conv(0, x))  # conv1
+    # maxpool 3x3 s2 -> 56x56
+    x = jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1), "SAME"
+    )
+    idx = 1
+
+    def basic(x, i, down_idx=None):
+        h = _bn_relu(p.conv(i, x))
+        h = p.conv(i + 1, h)
+        sc = p.conv(down_idx, x) if down_idx is not None else x
+        return jax.nn.relu(_bn_relu(h) + sc)
+
+    # layer1: idx 1..4
+    x = basic(x, 1)
+    x = basic(x, 3)
+    # layer2: 5,6 + down 7; then 8,9
+    x = basic(x, 5, down_idx=7)
+    x = basic(x, 8)
+    # layer3: 10,11 + 12; 13,14
+    x = basic(x, 10, down_idx=12)
+    x = basic(x, 13)
+    # layer4: 15,16 + 17; 18,19
+    x = basic(x, 15, down_idx=17)
+    x = basic(x, 18)
+    return x
+
+
+def _forward_vgg11(p: _Profiler, x: jax.Array) -> jax.Array:
+    pool_after = {0, 1, 3, 5, 7}
+    for i in range(len(p.spec.layers)):
+        x = _bn_relu(p.conv(i, x))
+        if i in pool_after:
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+            )
+    return x
+
+
+def profile_network(
+    spec: NetworkSpec,
+    n_images: int = 2,
+    image_hw: int | None = None,
+    sample_patches: int = 256,
+    seed: int = 0,
+) -> NetworkProfile:
+    key = jax.random.PRNGKey(seed)
+    kimg, kw = jax.random.split(key)
+    if image_hw is None:
+        image_hw = 224 if spec.name == "resnet18" else 32
+    x = synthetic_images(n_images, image_hw, kimg)
+    prof = _Profiler(spec, kw, sample_patches)
+    if spec.name == "resnet18":
+        _forward_resnet18(prof, x)
+    elif spec.name == "vgg11":
+        _forward_vgg11(prof, x)
+    else:
+        raise ValueError(f"no forward plan for {spec.name}")
+    layers = tuple(prof.records[i] for i in range(len(spec.layers)))
+    return NetworkProfile(spec.name, layers)

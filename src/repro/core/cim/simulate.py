@@ -1,0 +1,200 @@
+"""Allocation policies + pipelined-throughput simulator (Sections III & V).
+
+Four policies, matching the paper's Figure 8:
+
+  * ``baseline``        — zero-skipping OFF, arrays allocated by MACs
+                          (deterministic arrays: the pre-zero-skip world).
+  * ``weight_based``    — zero-skipping ON, arrays still allocated by MACs,
+                          layer-wise dataflow (the naive policy that the
+                          paper's 7.47x is measured against).
+  * ``perf_layerwise``  — zero-skipping ON, arrays allocated greedily by
+                          expected layer latency, layer-wise dataflow.
+  * ``blockwise``       — zero-skipping ON, arrays allocated greedily by
+                          expected *block* latency, block-wise dataflow
+                          (the paper's contribution).
+
+Dataflow model (steady-state pipelined throughput):
+
+  Layer-wise: a duplicate is a full copy of the layer's block grid; all
+  blocks of a duplicate synchronize per patch (gather/accumulate barrier), so
+  a patch costs max_b cycles[p, b] and layer latency for N images is
+      T_l = max( sum_p max_b c[p,b] / d_l ,  max_p max_b c[p,b] ).
+
+  Block-wise: each block is an independent server pool with d_b replicas and
+  no intra-layer barrier:
+      T_l = max_b max( sum_p c[p,b] / d_b ,  max_p c[p,b] ).
+
+  Layer pipelining makes throughput the bottleneck layer's:  T = max_l T_l.
+
+Per-patch cycles come from the profiled sample (see profile.py); sums over
+all patches are scaled from the sample mean.  Utilization = busy array-cycles
+/ (arrays alive x T), per layer — the paper's Figure 9.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Literal
+
+import numpy as np
+
+from ..alloc.greedy import greedy_allocate, proportional_allocate
+from .network import NetworkSpec
+from .profile import NetworkProfile
+
+__all__ = ["Policy", "Allocation", "SimResult", "allocate", "simulate", "run_policy"]
+
+Policy = Literal[
+    "baseline",
+    "weight_based",
+    "perf_layerwise",
+    "blockwise",
+    # ablation: weight-based ALLOCATION but block-wise DATAFLOW — separates
+    # the paper's two contributions (the paper reports them fused)
+    "weight_blockflow",
+]
+ARRAYS_PER_PE = 64
+CLOCK_HZ = 100e6
+
+
+@dataclass(frozen=True)
+class Allocation:
+    policy: Policy
+    layer_dups: np.ndarray | None  # (L,) for layer-wise policies
+    block_dups: list[np.ndarray] | None  # per-layer (B_l,) for blockwise
+    arrays_used: int
+    arrays_total: int
+
+
+@dataclass(frozen=True)
+class SimResult:
+    policy: Policy
+    total_cycles: float
+    images_per_sec: float
+    layer_cycles: np.ndarray  # (L,) per-layer makespan for the batch
+    layer_utilization: np.ndarray  # (L,) busy / (arrays x T)
+    arrays_used: int
+
+    @property
+    def mean_utilization(self) -> float:
+        return float(self.layer_utilization.mean())
+
+
+def _layer_patch_cycles(prof: NetworkProfile, zskip: bool) -> list[np.ndarray]:
+    """Per-layer (S, B) per-patch per-block cycle samples."""
+    out = []
+    for lp in prof.layers:
+        if zskip:
+            out.append(lp.cycles_sample.astype(np.float64))
+        else:
+            s = lp.cycles_sample.shape[0]
+            out.append(np.broadcast_to(lp.baseline_block_cycles.astype(np.float64), (s, lp.baseline_block_cycles.size)).copy())
+    return out
+
+
+def allocate(
+    spec: NetworkSpec,
+    prof: NetworkProfile,
+    policy: Policy,
+    n_pes: int,
+    arrays_per_pe: int = ARRAYS_PER_PE,
+) -> Allocation:
+    total = n_pes * arrays_per_pe
+    base_arrays = spec.n_arrays
+    if total < base_arrays:
+        raise ValueError(f"{total} arrays < minimum {base_arrays} for {spec.name}")
+    free = total - base_arrays
+    L = len(spec.layers)
+    layer_arrays = np.array([l.n_arrays for l in spec.layers], dtype=np.float64)
+    zskip = policy != "baseline"
+    cyc = _layer_patch_cycles(prof, zskip)
+    ppi = np.array([l.patches_per_image for l in spec.layers], dtype=np.float64)
+
+    if policy in ("baseline", "weight_based", "weight_blockflow"):
+        macs = np.array([l.macs_per_image for l in spec.layers], dtype=np.float64)
+        res = proportional_allocate(macs, layer_arrays, free)
+        dups = res.replicas
+        used = int(base_arrays + (res.replicas - 1) @ layer_arrays)
+        if policy == "weight_blockflow":
+            # same replica budget per layer, but blocks dispatch independently
+            block_dups = [
+                np.full(l.n_blocks, dups[i], dtype=np.int64)
+                for i, l in enumerate(spec.layers)
+            ]
+            return Allocation(policy, None, block_dups, used, total)
+        return Allocation(policy, dups, None, used, total)
+
+    if policy == "perf_layerwise":
+        # expected per-layer latency with one duplicate: patches x E[max_b c]
+        exp_lat = np.array([cyc[i].max(axis=1).mean() * ppi[i] for i in range(L)])
+        res = greedy_allocate(exp_lat, layer_arrays, free)
+        used = int(base_arrays + (res.replicas - 1) @ layer_arrays)
+        return Allocation(policy, res.replicas, None, used, total)
+
+    if policy == "blockwise":
+        # one unit per block across the whole network
+        base_lat, cost, owner = [], [], []
+        for i, layer in enumerate(spec.layers):
+            mean_b = cyc[i].mean(axis=0)  # (B,)
+            for b in range(layer.n_blocks):
+                base_lat.append(mean_b[b] * ppi[i])
+                cost.append(layer.arrays_per_block)
+                owner.append(i)
+        res = greedy_allocate(np.asarray(base_lat), np.asarray(cost, dtype=np.float64), free)
+        block_dups: list[np.ndarray] = []
+        k = 0
+        for layer in spec.layers:
+            block_dups.append(res.replicas[k : k + layer.n_blocks].copy())
+            k += layer.n_blocks
+        used = int(base_arrays + ((res.replicas - 1) * np.asarray(cost)).sum())
+        return Allocation(policy, None, block_dups, used, total)
+
+    raise ValueError(policy)
+
+
+def simulate(
+    spec: NetworkSpec,
+    prof: NetworkProfile,
+    alloc: Allocation,
+    n_images: int = 64,
+    clock_hz: float = CLOCK_HZ,
+) -> SimResult:
+    zskip = alloc.policy != "baseline"
+    cyc = _layer_patch_cycles(prof, zskip)
+    L = len(spec.layers)
+    layer_T = np.zeros(L)
+    busy = np.zeros(L)  # busy array-cycles
+    arrays_alive = np.zeros(L)
+
+    for i, layer in enumerate(spec.layers):
+        c = cyc[i]  # (S, B) per-patch-per-block cycles
+        P = layer.patches_per_image * n_images
+        width = layer.arrays_per_block
+        if alloc.layer_dups is not None:
+            d = float(alloc.layer_dups[i])
+            patch_t = c.max(axis=1)  # barrier: slowest block per patch
+            layer_T[i] = max(patch_t.mean() * P / d, patch_t.max())
+            arrays_alive[i] = layer.n_arrays * d
+        else:
+            dups = alloc.block_dups[i].astype(np.float64)  # (B,)
+            per_block = np.maximum(c.mean(axis=0) * P / dups, c.max(axis=0))
+            layer_T[i] = per_block.max()
+            arrays_alive[i] = float((dups * width).sum())
+        # busy cycles are allocation-independent: every (patch, block) job
+        # runs exactly once on `width` arrays.
+        busy[i] = c.mean(axis=0).sum() * P * width
+
+    T = float(layer_T.max())  # pipelined bottleneck
+    util = busy / (arrays_alive * T)
+    ips = n_images / (T / clock_hz)
+    return SimResult(alloc.policy, T, ips, layer_T, util, alloc.arrays_used)
+
+
+def run_policy(
+    spec: NetworkSpec,
+    prof: NetworkProfile,
+    policy: Policy,
+    n_pes: int,
+    n_images: int = 64,
+) -> SimResult:
+    return simulate(spec, prof, allocate(spec, prof, policy, n_pes), n_images)

@@ -1,0 +1,265 @@
+"""Static cost analysis over post-SPMD optimized HLO text.
+
+Why not ``compiled.cost_analysis()``?  XLA's HloCostAnalysis visits every
+computation ONCE: a ``jax.lax.scan`` over L layers reports the loop body's
+FLOPs a single time, so any scanned model undercounts by ~L.  This analyzer
+parses the HLO text, builds the computation call graph, extracts while-loop
+trip counts from their condition computations, and multiplies.
+
+Per-computation metrics:
+  * flops            — 2 * prod(output dims) * prod(contracting dims) per
+                       dot; convolutions likewise (2 * out * k * cin).
+  * hbm_bytes        — for TOP-LEVEL instructions of non-fusion computations:
+                       output bytes + operand bytes (resolved through a
+                       per-computation symbol table — scheduled HLO does not
+                       inline operand shapes).  Post-optimization HLO is
+                       fully fused, so top-level buffers are the HBM-resident
+                       ones; fusion-internal elementwise ops never touch HBM.
+  * collective_bytes — operand bytes of all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute.
+
+These aggregate over the call graph (while bodies x trip count, fusions /
+calls / branches x 1) to whole-program totals.  This is the "profile" the
+perf loop iterates on: a dry-run-only, hardware-independent static trace.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+__all__ = ["HloCost", "analyze_hlo", "parse_computations"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVE_BASES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+}
+
+_SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "partition-id", "replica-id",
+    "iota", "copy-start", "copy-done",
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*"
+    r"(\([^()]*\)|[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^{}]*\})?)\s*"
+    r"([\w\-]+)\("
+)
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body)=(%[\w.\-]+)")
+_COND_RE = re.compile(r"condition=(%[\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_INT_RE = re.compile(r"constant\((\d+)\)")
+_TRIP_RE = re.compile(r'trip_count["=:\s]+(\d+)')
+_OPERAND_RE = re.compile(r"%[\w.\-]+")
+_PARAM_RE = re.compile(r"([\w.\-]+)\s*:\s*(\([^()]*\)|[a-z][a-z0-9]*\[[0-9,]*\])")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _is_comp_header(line: str) -> str | None:
+    """Return computation name if this line opens a computation body."""
+    s = line.rstrip()
+    if not s.endswith("{"):
+        return None
+    s2 = s.lstrip()
+    if s2.startswith("ENTRY "):
+        s2 = s2[len("ENTRY "):]
+    if not s2.startswith("%") and not s2[:1].isalpha():
+        return None
+    if " -> " not in s2:
+        return None
+    name = re.match(r"(%?[\w.\-]+)", s2)
+    if not name:
+        return None
+    # exclude instruction lines ("%x = ... {" never happens at top level)
+    if "=" in s2.split("(")[0]:
+        return None
+    return name.group(1).lstrip("%")
+
+
+def _dot_flops(line: str, out_shape: str, symtab: dict[str, str]) -> float:
+    out_elems = 1
+    m = _SHAPE_RE.search(out_shape)
+    if not m:
+        return 0.0
+    for d in m.group(2).split(","):
+        if d:
+            out_elems *= int(d)
+    paren = line[line.index("(") :]
+    ops = _OPERAND_RE.findall(paren.split("), ")[0] + ")")
+    lhs_shape = symtab.get(ops[0].lstrip("%"), "") if ops else ""
+    sm = _SHAPE_RE.search(lhs_shape)
+    lhs_dims = [int(d) for d in sm.group(2).split(",") if d] if sm else []
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    contract = 1
+    if cm and lhs_dims:
+        for idx in cm.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                contract *= lhs_dims[int(idx)]
+    elif lhs_dims:
+        contract = lhs_dims[-1]
+    return 2.0 * out_elems * contract
+
+
+@dataclass
+class _Comp:
+    name: str
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    coll_by_op: dict = field(default_factory=dict)
+    coll_count: dict = field(default_factory=dict)
+    calls: list = field(default_factory=list)  # (callee, kind, cond, trip)
+    max_const: int = 0
+    is_fusion: bool = False
+
+
+def parse_computations(text: str) -> tuple[dict[str, "_Comp"], str]:
+    comps: dict[str, _Comp] = {}
+    entry_name = ""
+    cur: _Comp | None = None
+    symtab: dict[str, str] = {}
+
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        header = _is_comp_header(line)
+        if header is not None:
+            cur = _Comp(name=header, is_fusion="fused" in header)
+            comps[header] = cur
+            if line.lstrip().startswith("ENTRY"):
+                entry_name = header
+            symtab = {}
+            # computation parameters carry shapes in the header
+            for pname, pshape in _PARAM_RE.findall(line):
+                symtab[pname] = pshape
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            for c in _CONST_INT_RE.findall(line):
+                cur.max_const = max(cur.max_const, int(c))
+            continue
+        name, out_shape, opcode = m.groups()
+        symtab[name.lstrip("%")] = out_shape
+        for c in _CONST_INT_RE.findall(line):
+            cur.max_const = max(cur.max_const, int(c))
+
+        paren_all = line[line.index("(") :]
+        arg_str = paren_all.split("), ")[0]
+        operand_names = [o.lstrip("%") for o in _OPERAND_RE.findall(arg_str)]
+        operand_bytes = sum(_shape_bytes(symtab.get(o, "")) for o in operand_names)
+
+        if opcode in ("dot", "convolution"):
+            cur.flops += _dot_flops(line, out_shape, symtab)
+
+        base_op = opcode.replace("-start", "")
+        if base_op in _COLLECTIVE_BASES and not opcode.endswith("-done"):
+            nbytes = operand_bytes or _shape_bytes(out_shape)
+            cur.collective_bytes += nbytes
+            cur.coll_by_op[base_op] = cur.coll_by_op.get(base_op, 0) + nbytes
+            cur.coll_count[base_op] = cur.coll_count.get(base_op, 0) + 1
+        elif not cur.is_fusion and opcode not in _SKIP_BYTES:
+            cur.hbm_bytes += _shape_bytes(out_shape) + operand_bytes
+
+        if opcode == "while":
+            bm = _CALLS_RE.search(line)
+            cm = _COND_RE.search(line)
+            tm = _TRIP_RE.search(line)
+            trip = int(tm.group(1)) if tm else None
+            if bm:
+                cur.calls.append(
+                    (bm.group(1).lstrip("%"), "while", cm.group(1).lstrip("%") if cm else None, trip)
+                )
+        elif opcode == "conditional":
+            bm = _BRANCHES_RE.search(line)
+            if bm:
+                for b in bm.group(1).split(","):
+                    cur.calls.append((b.strip().lstrip("%"), "branch", None, None))
+        else:
+            for callee in _CALLS_RE.findall(line):
+                cur.calls.append((callee.lstrip("%"), "call", None, None))
+    return comps, entry_name
+
+
+@dataclass(frozen=True)
+class HloCost:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    coll_by_op: dict
+    coll_count: dict
+    n_while: int
+    trip_counts: tuple
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps, entry = parse_computations(text)
+    memo: dict[str, tuple] = {}
+    trips: list[int] = []
+
+    def total(name: str, stack=()) -> tuple:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return (0.0, 0.0, 0.0, {}, {})
+        c = comps[name]
+        f, h, cb = c.flops, c.hbm_bytes, c.collective_bytes
+        cbo = dict(c.coll_by_op)
+        cbc = dict(c.coll_count)
+        for callee, kind, cond, trip in c.calls:
+            cf, ch, ccb, ccbo, ccbc = total(callee, stack + (name,))
+            mult = 1
+            if kind == "while":
+                if trip is None:
+                    # heuristic: largest integer constant in the condition
+                    # computation (jax scans lower to `i < L` compares)
+                    trip = comps[cond].max_const if cond in comps else 1
+                mult = max(int(trip), 1)
+                trips.append(mult)
+            f += cf * mult
+            h += ch * mult
+            cb += ccb * mult
+            for k, v in ccbo.items():
+                cbo[k] = cbo.get(k, 0) + v * mult
+            for k, v in ccbc.items():
+                cbc[k] = cbc.get(k, 0) + v * mult
+        memo[name] = (f, h, cb, cbo, cbc)
+        return memo[name]
+
+    n_while = sum(
+        1 for c in comps.values() for call in c.calls if call[1] == "while"
+    )
+    f, h, cb, cbo, cbc = total(entry)
+    return HloCost(
+        flops=f,
+        hbm_bytes=h,
+        collective_bytes=cb,
+        coll_by_op=cbo,
+        coll_count=cbc,
+        n_while=n_while,
+        trip_counts=tuple(sorted(trips, reverse=True)),
+    )

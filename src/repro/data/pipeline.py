@@ -1,0 +1,83 @@
+"""Deterministic synthetic token pipeline.
+
+Production shape: shard-aware (each data-parallel group reads its own slice),
+deterministically seeded by (seed, step) so that resume-from-checkpoint
+replays the exact stream without storing cursor state — the skip-ahead is
+O(1), which is what makes checkpoint/restart cheap at scale.
+
+The token distribution is Zipfian with a repeating n-gram structure so that
+losses actually decrease during the example runs (pure uniform noise has no
+learnable signal).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["DataConfig", "SyntheticLM", "batch_for_step"]
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.3
+    motif_len: int = 16
+    motif_count: int = 64
+
+
+class SyntheticLM:
+    """Zipfian tokens with injected repeating motifs (learnable structure)."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        # frozen motif table: short phrases the model can memorize
+        self.motifs = rng.integers(
+            0, cfg.vocab, size=(cfg.motif_count, cfg.motif_len), dtype=np.int32
+        )
+        ranks = np.arange(1, cfg.vocab + 1, dtype=np.float64)
+        probs = ranks ** (-cfg.zipf_a)
+        self.probs = probs / probs.sum()
+
+    def batch(self, step: int, shard: int = 0, n_shards: int = 1) -> dict:
+        """One (batch_local, seq+1) batch for `step`, deterministic in
+        (seed, step, shard).  Resume = just call with the resumed step."""
+        cfg = self.cfg
+        assert cfg.global_batch % n_shards == 0
+        b_local = cfg.global_batch // n_shards
+        rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, step, shard])
+        )
+        toks = rng.choice(
+            cfg.vocab, size=(b_local, cfg.seq_len + 1), p=self.probs
+        ).astype(np.int32)
+        # overwrite random spans with motifs (predictable continuations)
+        n_spans = cfg.seq_len // (cfg.motif_len * 4)
+        for i in range(b_local):
+            for _ in range(max(n_spans, 1)):
+                m = rng.integers(0, cfg.motif_count)
+                pos = rng.integers(0, cfg.seq_len + 1 - cfg.motif_len)
+                toks[i, pos : pos + cfg.motif_len] = self.motifs[m]
+        return {
+            "tokens": jnp.asarray(toks[:, :-1]),
+            "targets": jnp.asarray(toks[:, 1:]),
+        }
+
+    def stream(self, start_step: int = 0, shard: int = 0, n_shards: int = 1) -> Iterator[dict]:
+        step = start_step
+        while True:
+            yield self.batch(step, shard, n_shards)
+            step += 1
+
+
+def batch_for_step(cfg: DataConfig, step: int) -> dict:
+    """Convenience single-host accessor (examples / tests)."""
+    return SyntheticLM(cfg).batch(step)

@@ -1,0 +1,24 @@
+from .pipeline import bubble_fraction, make_pipeline_fn, report_stage_plan, stack_stages
+from .sharding import (
+    batch_axes,
+    cache_specs,
+    data_specs,
+    named,
+    opt_specs,
+    param_specs,
+    tp_size,
+)
+
+__all__ = [
+    "bubble_fraction",
+    "make_pipeline_fn",
+    "report_stage_plan",
+    "stack_stages",
+    "batch_axes",
+    "cache_specs",
+    "data_specs",
+    "named",
+    "opt_specs",
+    "param_specs",
+    "tp_size",
+]

@@ -1,0 +1,32 @@
+"""Current-mesh context: lets pure model code (moe_fwd) select the
+distributed dispatch path without threading the mesh through every call.
+
+``build_cell`` / the launchers set this; CPU smoke tests leave it unset and
+get the purely local dispatch path.
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+from jax.sharding import Mesh
+
+_CURRENT: list[Mesh | None] = [None]
+
+
+def set_mesh(mesh: Mesh | None) -> None:
+    _CURRENT[0] = mesh
+
+
+def get_mesh() -> Mesh | None:
+    return _CURRENT[0]
+
+
+@contextmanager
+def use_mesh(mesh: Mesh):
+    prev = _CURRENT[0]
+    _CURRENT[0] = mesh
+    try:
+        yield mesh
+    finally:
+        _CURRENT[0] = prev

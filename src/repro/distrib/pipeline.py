@@ -1,0 +1,139 @@
+"""Pipeline parallelism: GPipe-style microbatch executor over a 'pipe' mesh
+axis.
+
+The paper's layer-pipelining section maps here directly: stages are the
+"array groups", microbatches are the images streaming through, and the
+fill/drain bubble (P-1)/(M+P-1) is the pipeline's synchronization cost.
+Stage boundaries come from `core/alloc/pipeline_stages.partition_stages`
+(the paper's performance-based allocation): stages are balanced by PROFILED
+per-layer cost, not layer count.
+
+Mechanics (SPMD, shard_map over 'pipe'):
+  * every stage holds its slice of the (cost-balanced) stacked layer params,
+  * each tick: stage 0 injects the next microbatch, every stage applies its
+    layers, activations `collective-permute` one hop right,
+  * the last stage banks its result; outputs return via a masked psum.
+  * backward: jax AD differentiates straight through the schedule —
+    ppermute transposes to the reverse permute, giving the classic
+    fill-drain backward pipeline for free.
+
+`stage_fn` must be shape-preserving ((mb, s, d) -> (mb, s, d)); embedding
+and head run outside the pipelined region (replicated over 'pipe').
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..core.alloc.pipeline_stages import partition_stages
+
+__all__ = ["stack_stages", "make_pipeline_fn", "bubble_fraction"]
+
+
+def bubble_fraction(n_stages: int, n_micro: int) -> float:
+    """Idle fraction of the GPipe schedule (the pipelining barrier cost)."""
+    return (n_stages - 1) / (n_micro + n_stages - 1)
+
+
+def stack_stages(layer_params, costs: np.ndarray, n_stages: int):
+    """Slice a stacked layer tree (L, ...) into (n_stages, L/P, ...).
+
+    Layers are SEQUENTIAL, so stages must be CONTIGUOUS ranges in original
+    order; the SPMD executor additionally needs equal layers per stage, so
+    the split is the equal contiguous one.  Cost awareness enters through
+    `report_stage_plan` (the paper's performance-based partition): when the
+    profiled per-layer costs make the equal split imbalanced, the remedy at
+    fixed L/P is choosing a different n_stages or moving to a ragged
+    (non-SPMD, per-stage-program) schedule — both reported, not silently
+    "fixed" by an order-breaking permutation."""
+    L = jax.tree.leaves(layer_params)[0].shape[0]
+    if L % n_stages != 0:
+        raise ValueError(f"L={L} must divide n_stages={n_stages} for SPMD PP")
+    per = L // n_stages
+    stages = jax.tree.map(
+        lambda a: a.reshape((n_stages, per) + a.shape[1:]), layer_params
+    )
+    loads = np.asarray(costs, dtype=np.float64).reshape(n_stages, per).sum(axis=1)
+    return stages, loads
+
+
+def report_stage_plan(costs: np.ndarray, n_stages: int) -> dict:
+    """Compare the SPMD equal split against the optimal contiguous
+    (cost-balanced, possibly ragged) partition from the paper's algorithm."""
+    costs = np.asarray(costs, dtype=np.float64)
+    per = -(-costs.size // n_stages)
+    equal = [(i * per, min((i + 1) * per, costs.size)) for i in range(n_stages)]
+    ragged = partition_stages(costs, n_stages)
+
+    def bn(st):
+        return max(costs[a:b].sum() for a, b in st if b > a)
+
+    return {
+        "equal_bottleneck": bn(equal),
+        "ragged_bottleneck": bn(ragged),
+        "ragged_gain": bn(equal) / bn(ragged),
+        "ragged_bounds": ragged,
+    }
+
+
+def make_pipeline_fn(
+    stage_fn: Callable,  # (stage_params, x) -> x, shape-preserving
+    mesh: Mesh,
+    n_micro: int,
+):
+    """Returns pipelined(stages_params, xs) with xs (n_micro, mb, ...)."""
+    n_stages = mesh.shape["pipe"]
+    fwd_perm = [(i, i + 1) for i in range(n_stages - 1)]
+
+    def local(stage_params, xs):
+        # stage_params: (1, per, ...) local slice; xs: (n_micro, mb, ...)
+        stage_params = jax.tree.map(lambda a: a[0], stage_params)
+        stage = jax.lax.axis_index("pipe")
+        n_t = n_micro + n_stages - 1
+        pad = jnp.zeros_like(xs[:1])
+        xs_padded = jnp.concatenate([xs, jnp.repeat(pad, n_stages - 1, 0)], 0)
+        out0 = jnp.zeros_like(xs)
+
+        def tick(carry, x_t):
+            received, out_buf, t = carry
+            x_in = jnp.where(stage == 0, x_t, received)
+            y = stage_fn(stage_params, x_in)
+            mb_idx = t - stage  # microbatch this stage works on
+            active = (mb_idx >= 0) & (mb_idx < n_micro)
+            y = jnp.where(active, y, 0.0)
+            nxt = (
+                jax.lax.ppermute(y, "pipe", fwd_perm)
+                if n_stages > 1
+                else jnp.zeros_like(y)
+            )
+            slot = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
+            bank = active & (stage == n_stages - 1)
+            out_buf = jax.lax.dynamic_update_slice_in_dim(
+                out_buf,
+                jnp.where(bank, y, jax.lax.dynamic_slice_in_dim(out_buf, slot, 1, 0)[0])[None],
+                slot,
+                axis=0,
+            )
+            return (nxt, out_buf, t + 1), None
+
+        (_, out_buf, _), _ = jax.lax.scan(
+            tick, (jnp.zeros_like(xs[0]), out0, jnp.int32(0)), xs_padded
+        )
+        # only the last stage holds real outputs; spread via masked psum
+        mine = jnp.where(stage == n_stages - 1, out_buf, 0.0)
+        return jax.lax.psum(mine, "pipe")
+
+    return jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P("pipe"), P()),
+        out_specs=P(),
+        axis_names=frozenset({"pipe"}),
+        check_vma=False,
+    )

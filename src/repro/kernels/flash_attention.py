@@ -1,0 +1,106 @@
+"""Flash attention (forward) Pallas kernel for TPU.
+
+The q-chunked pure-JAX path (models/layers._sdpa) bounds LIVE memory but
+still writes O(s^2) probability blocks to HBM.  This kernel keeps the
+running softmax state (m, l, acc) in VMEM across the kv-block grid axis so
+HBM traffic is O(s*d): q, k, v read once, o written once — the roofline
+§Perf iterations substitute this kernel's analytic traffic for the lowered
+pure-JAX attention.
+
+Grid: (batch*heads, q_blocks, kv_blocks), kv innermost.  Causal masking per
+(q_block, kv_block) tile; fully-masked kv tiles are predicated off with
+@pl.when — the same "skip work that is provably zero" trick the paper plays
+at the word-line level (its Fig 2), applied at tile granularity.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+_NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, n_kv: int, bq: int, bk: int, causal: bool, scale: float):
+    kb = pl.program_id(2)
+    qb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal: kv block strictly after the q block is all-masked -> skip
+    run = (not causal) or (kb * bk <= qb * bq + bq - 1)
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0]  # (bq, hd)
+        k = k_ref[0]  # (bk, hd)
+        v = v_ref[0]  # (bk, hd)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, _NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(kb == n_kv - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "bq", "bk", "interpret")
+)
+def flash_attention(
+    q: jax.Array,  # (bh, sq, hd)  — batch*heads flattened
+    k: jax.Array,  # (bh, sk, hd)
+    v: jax.Array,  # (bh, sk, hd)
+    *,
+    causal: bool = True,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, sq, hd = q.shape
+    sk = k.shape[1]
+    assert sq % bq == 0 and sk % bk == 0, (sq, sk, bq, bk)
+    n_kv = sk // bk
+    grid = (bh, sq // bq, n_kv)
+    scale = 1.0 / np.sqrt(hd)
+    return pl.pallas_call(
+        functools.partial(
+            _fa_kernel, n_kv=n_kv, bq=bq, bk=bk, causal=causal, scale=scale
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),  # running max
+            pltpu.VMEM((bq, 1), jnp.float32),  # running denom
+            pltpu.VMEM((bq, hd), jnp.float32),  # accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

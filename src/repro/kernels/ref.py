@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["zskip_matmul_ref", "block_mask_ref", "flash_attention_ref", "ssd_chunk_ref"]
+
+
+def block_mask_ref(a: jax.Array, bm: int, bk: int) -> jax.Array:
+    """(M/bm, K/bk) int32 map: 1 where the A tile has any nonzero."""
+    M, K = a.shape
+    tiles = a.reshape(M // bm, bm, K // bk, bk)
+    return (jnp.abs(tiles).sum(axis=(1, 3)) > 0).astype(jnp.int32)
+
+
+def zskip_matmul_ref(a: jax.Array, b: jax.Array, block_mask: jax.Array, bm: int, bk: int) -> jax.Array:
+    """Matmul with zeroed-out skipped A tiles (== exact matmul when the mask
+    marks exactly the all-zero tiles)."""
+    M, K = a.shape
+    mask_full = jnp.repeat(jnp.repeat(block_mask, bm, axis=0), bk, axis=1)
+    a_eff = a * mask_full.astype(a.dtype)
+    return (a_eff.astype(jnp.float32) @ b.astype(jnp.float32)).astype(a.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True) -> jax.Array:
+    """(bh, s, hd) dense softmax attention in fp32."""
+    bh, sq, hd = q.shape
+    sk = k.shape[1]
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / np.sqrt(hd)
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_chunk_ref(cum, xdt, B, C):
+    """Oracle for kernels.ssd_scan.ssd_chunk (see models/ssm.ssd_chunked)."""
+    cum = cum.astype(jnp.float32)
+    Q = cum.shape[1]
+    diff = cum[:, :, None, :] - cum[:, None, :, :]  # (nc, Q, Q, H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None]
+    L = jnp.exp(jnp.where(tri, diff, -jnp.inf))
+    scores = jnp.einsum("cqn,ckn->cqk", C.astype(jnp.float32), B.astype(jnp.float32))
+    y = jnp.einsum("cqk,cqkh,ckhp->cqhp", scores, L, xdt.astype(jnp.float32))
+    decay_end = jnp.exp(cum[:, -1:, :] - cum)  # (nc, Q, H)
+    S = jnp.einsum("ckh,ckn,ckhp->chnp", decay_end, B.astype(jnp.float32), xdt.astype(jnp.float32))
+    return y.astype(xdt.dtype), S

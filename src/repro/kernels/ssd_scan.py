@@ -1,0 +1,93 @@
+"""SSD (Mamba2) per-chunk Pallas kernel.
+
+Computes, for one (batch x chunk, head-block) grid cell, the fused
+intra-chunk output and the chunk summary state:
+
+    y_intra[q, h, p] = sum_{k<=q} (C_q . B_k) * exp(cum_q,h - cum_k,h) * xdt[k, h, p]
+    S_chunk[h, n, p] = sum_k exp(cum_last,h - cum_k,h) * B[k, n] * xdt[k, h, p]
+
+The (Q, Q) score matrix C @ B^T hits the MXU once per cell and is reused for
+every head in the block — the decay mask L is the only per-head term.  The
+inter-chunk recurrence (a length-n_chunks scan) stays in JAX: it is O(s/Q)
+sequential and tiny.
+
+VMEM working set per cell: Q*N (B, C) + Q*Q scores + HB*(Q*P + Q) ~ well
+under 1 MiB at Q=128, N=128, HB=4, P=64; all matmul dims are multiples of
+the 128 MXU tile except P=64 (padded by Mosaic).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["ssd_chunk"]
+
+
+def _ssd_chunk_kernel(cum_ref, xdt_ref, b_ref, c_ref, y_ref, s_ref):
+    # block shapes: cum (1, Q, HB), xdt (1, Q, HB, P), b/c (1, Q, N)
+    cum = cum_ref[0].astype(jnp.float32)  # (Q, HB)
+    B = b_ref[0]  # (Q, N)
+    C = c_ref[0]  # (Q, N)
+    Q = cum.shape[0]
+    scores = jnp.dot(C, B.T, preferred_element_type=jnp.float32)  # (Q, Q)
+    iq = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    ik = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    tri = iq >= ik
+
+    hb = xdt_ref.shape[2]
+    for h in range(hb):  # head block is small + static: unrolled
+        diff = cum[:, None, h] - cum[None, :, h]  # (Q, Q)
+        L = jnp.where(tri, jnp.exp(diff), 0.0)
+        xdt_h = xdt_ref[0, :, h, :]  # (Q, P)
+        y_ref[0, :, h, :] = jnp.dot(
+            scores * L, xdt_h.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        ).astype(y_ref.dtype)
+        decay_end = jnp.exp(cum[-1, h] - cum[:, h])  # (Q,)
+        bw = B * decay_end[:, None].astype(B.dtype)  # (Q, N)
+        s_ref[0, h, :, :] = jnp.dot(
+            bw.T, xdt_h, preferred_element_type=jnp.float32
+        ).astype(s_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("head_block", "interpret"))
+def ssd_chunk(
+    cum: jax.Array,  # (nc, Q, H)  cumulative log-decay per chunk
+    xdt: jax.Array,  # (nc, Q, H, P)  dt-weighted inputs
+    B: jax.Array,  # (nc, Q, N)
+    C: jax.Array,  # (nc, Q, N)
+    *,
+    head_block: int = 4,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y_intra (nc, Q, H, P), S_chunk (nc, H, N, P))."""
+    nc, Q, H = cum.shape
+    P = xdt.shape[-1]
+    N = B.shape[-1]
+    assert H % head_block == 0, (H, head_block)
+    grid = (nc, H // head_block)
+    hb = head_block
+    y, s = pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, hb), lambda c, h: (c, 0, h)),
+            pl.BlockSpec((1, Q, hb, P), lambda c, h: (c, 0, h, 0)),
+            pl.BlockSpec((1, Q, N), lambda c, h: (c, 0, 0)),
+            pl.BlockSpec((1, Q, N), lambda c, h: (c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, hb, P), lambda c, h: (c, 0, h, 0)),
+            pl.BlockSpec((1, hb, N, P), lambda c, h: (c, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nc, Q, H, P), xdt.dtype),
+            jax.ShapeDtypeStruct((nc, H, N, P), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cum, xdt, B, C)
+    return y, s

@@ -1,0 +1,165 @@
+"""Per-cell abstract inputs + shardings for the dry-run and launchers.
+
+``build_cell(arch, shape, mesh)`` resolves one (architecture x input-shape)
+cell into: the step function to jit, abstract args (ShapeDtypeStruct —
+weak-type-correct, shardable, NO device allocation), in/out shardings, and
+the cell's useful MODEL_FLOPS for the roofline.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..configs import SHAPE_SPECS, get_config
+from ..distrib.sharding import (
+    batch_axes,
+    cache_specs,
+    data_specs,
+    named,
+    opt_specs,
+    param_specs,
+)
+from ..models import encdec, lm
+from ..models.config import ModelConfig
+from ..optim.adamw import AdamWConfig, adamw_init
+from ..train.step import (
+    make_decode_step,
+    make_encdec_decode_step,
+    make_encdec_prefill_step,
+    make_encdec_train_step,
+    make_prefill_step,
+    make_train_step,
+)
+
+__all__ = ["Cell", "build_cell"]
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    cfg: ModelConfig
+    fn: Callable
+    args: tuple  # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: Any
+    model_flops: float
+    kind: str
+
+
+def _abstract(fn) -> Any:
+    return jax.eval_shape(fn)
+
+
+def _abstract_params(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return _abstract(lambda: encdec.init_encdec_params(cfg, jax.random.PRNGKey(0)))
+    return _abstract(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def _tokens_struct(b: int, s: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def build_cell(
+    arch: str,
+    shape: str,
+    mesh: Mesh,
+    opt: AdamWConfig | None = None,
+    smoke: bool = False,
+    overrides: dict | None = None,
+) -> Cell:
+    from ..distrib.context import set_mesh
+
+    set_mesh(mesh)  # moe_fwd dispatch path selection
+    cfg = get_config(arch, smoke=smoke)
+    if overrides:
+        cfg = cfg.with_(**overrides)
+    spec = SHAPE_SPECS[shape]
+    B, S, kind = spec["global_batch"], spec["seq_len"], spec["kind"]
+    if smoke:
+        B, S = 2, 32
+    opt = opt or AdamWConfig()
+
+    p_shape = _abstract_params(cfg)
+    if spec["kind"] in ("prefill", "decode"):
+        # serving runs on bf16 weights (fp32 masters are a training concern)
+        p_shape = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, jnp.bfloat16)
+            if a.dtype == jnp.float32
+            else a,
+            p_shape,
+        )
+    p_spec = param_specs(cfg, p_shape, mesh)
+    p_shard = named(mesh, p_spec)
+    dspec = data_specs(mesh, B)
+    dshard = named(mesh, dspec)
+    n_active = cfg.active_param_count()
+
+    if kind == "train":
+        o_shape = _abstract(lambda: adamw_init(p_shape))
+        o_spec = opt_specs(cfg, o_shape, mesh)
+        o_shard = named(mesh, o_spec)
+        if cfg.family == "encdec":
+            fn = make_encdec_train_step(cfg, opt)
+            batch = {
+                "frames": jax.ShapeDtypeStruct(
+                    (B, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype)
+                ),
+                "tokens": _tokens_struct(B, S),
+                "targets": _tokens_struct(B, S),
+            }
+        else:
+            fn = make_train_step(cfg, opt)
+            batch = {"tokens": _tokens_struct(B, S), "targets": _tokens_struct(B, S)}
+        b_shard = jax.tree.map(lambda _: dshard, batch)
+        args = (p_shape, o_shape, batch)
+        in_sh = (p_shard, o_shard, b_shard)
+        out_sh = (p_shard, o_shard, None)
+        model_flops = 6.0 * n_active * B * S
+        return Cell(arch, shape, cfg, fn, args, in_sh, out_sh, model_flops, kind)
+
+    if kind == "prefill":
+        if cfg.family == "encdec":
+            fn = make_encdec_prefill_step(cfg)
+            frames = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype)
+            )
+            args = (p_shape, frames, _tokens_struct(B, S))
+            in_sh = (p_shard, dshard, dshard)
+        else:
+            fn = make_prefill_step(cfg)
+            args = (p_shape, _tokens_struct(B, S))
+            in_sh = (p_shard, dshard)
+        model_flops = 2.0 * n_active * B * S
+        return Cell(arch, shape, cfg, fn, args, in_sh, None, model_flops, kind)
+
+    # ---- decode: one new token with a cache of length S
+    if cfg.family == "encdec":
+        c_shape = _abstract(
+            lambda: encdec.init_decoder_cache(cfg, B, S, jnp.dtype(cfg.dtype))
+        )
+        c_spec = cache_specs(cfg, c_shape, mesh)
+        c_shard = named(mesh, c_spec)
+        enc_out = jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+        fn = make_encdec_decode_step(cfg)
+        args = (p_shape, c_shape, enc_out, _tokens_struct(B, 1))
+        in_sh = (p_shard, c_shard, dshard, dshard)
+        out_sh = (None, c_shard)
+    else:
+        c_shape = _abstract(lambda: lm.init_cache(cfg, B, S, jnp.dtype(cfg.dtype)))
+        c_spec = cache_specs(cfg, c_shape, mesh)
+        c_shard = named(mesh, c_spec)
+        fn = make_decode_step(cfg)
+        args = (p_shape, c_shape, _tokens_struct(B, 1))
+        in_sh = (p_shard, c_shard, dshard)
+        out_sh = (None, c_shard)
+    model_flops = 2.0 * n_active * B * 1
+    return Cell(arch, shape, cfg, fn, args, in_sh, out_sh, model_flops, "decode")

@@ -1,0 +1,107 @@
+"""End-to-end trainer.
+
+On real hardware this runs under the production mesh; on this container it
+runs the smoke config of any architecture on the 1x1 CPU mesh — the same
+code path (jit + shardings + fault-tolerant runner + checkpoints).
+
+  PYTHONPATH=src python -m repro.launch.train --arch glm4-9b --steps 20 \
+      --smoke --ckpt /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from ..configs import ARCH_IDS, get_config
+from ..data.pipeline import DataConfig, SyntheticLM
+from ..distrib.context import set_mesh
+from ..distrib.sharding import data_specs, named, opt_specs, param_specs
+from ..models import lm
+from ..optim.adamw import AdamWConfig, adamw_init
+from ..runtime.fault import RunnerConfig, TrainRunner
+from ..train.step import make_train_step
+from .mesh import make_cpu_mesh, make_production_mesh
+
+
+def fingerprint(cfg) -> str:
+    return f"{cfg.name}/L{cfg.n_layers}/d{cfg.d_model}/v{cfg.vocab}"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="glm4-9b")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if cfg.family == "encdec":
+        raise SystemExit("use examples/whisper_train.py for the enc-dec arch")
+    mesh = make_production_mesh() if args.production_mesh else make_cpu_mesh()
+    set_mesh(mesh)
+    opt = AdamWConfig(lr=args.lr, warmup_steps=5, total_steps=args.steps)
+
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(cfg, key)
+    opt_state = adamw_init(params)
+    p_sh = named(mesh, param_specs(cfg, params, mesh))
+    o_sh = named(mesh, opt_specs(cfg, opt_state, mesh))
+    d_sh = named(mesh, data_specs(mesh, args.batch))
+
+    with mesh:
+        step_fn = jax.jit(
+            make_train_step(cfg, opt),
+            in_shardings=(p_sh, o_sh, {"tokens": d_sh, "targets": d_sh}),
+            out_shardings=(p_sh, o_sh, None),
+        )
+
+        data = SyntheticLM(
+            DataConfig(vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch)
+        )
+        runner = TrainRunner(
+            RunnerConfig(ckpt_dir=args.ckpt, ckpt_every=args.ckpt_every),
+            step_fn,
+            lambda s: data.batch(s),
+            fingerprint=fingerprint(cfg),
+        )
+        start = 0
+        if args.resume:
+            restored_step, tree = runner._restore(params, opt_state)
+            if tree is not None:
+                params, opt_state = tree["params"], tree["opt"]
+                start = restored_step
+                print(f"resumed from step {start}")
+        t0 = time.time()
+        params, opt_state = runner.run(params, opt_state, args.steps, start)
+        dt = time.time() - t0
+
+    losses = [h.metrics.get("loss", float("nan")) for h in runner.history]
+    print(
+        json.dumps(
+            {
+                "arch": cfg.name,
+                "steps": len(runner.history),
+                "first_loss": losses[0] if losses else None,
+                "last_loss": losses[-1] if losses else None,
+                "wall_s": round(dt, 1),
+                "restores": runner.restores,
+            }
+        )
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

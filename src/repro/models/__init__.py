@@ -1,0 +1,27 @@
+"""Model zoo: flexible decoder-only LM + enc-dec assemblers."""
+
+from .config import AttnConfig, ModelConfig, MoEConfig, SSMConfig
+from .lm import forward, init_cache, init_params, loss_fn
+from .encdec import (
+    decode,
+    encode,
+    encdec_loss_fn,
+    init_decoder_cache,
+    init_encdec_params,
+)
+
+__all__ = [
+    "AttnConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "forward",
+    "init_cache",
+    "init_params",
+    "loss_fn",
+    "decode",
+    "encode",
+    "encdec_loss_fn",
+    "init_decoder_cache",
+    "init_encdec_params",
+]

@@ -1,0 +1,173 @@
+"""Encoder-decoder (Whisper-style) backbone.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (b, encoder_seq, d_model).  Encoder =
+bidirectional self-attention stack; decoder = causal self-attention +
+cross-attention stack with a token embedding and LM head.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (
+    _dense,
+    _sdpa,
+    apply_rope,
+    init_gqa,
+    init_gqa_cache,
+    init_mlp,
+    init_rmsnorm,
+    gqa_fwd,
+    mlp_fwd,
+    rmsnorm,
+)
+
+__all__ = [
+    "init_encdec_params",
+    "encode",
+    "decode",
+    "init_decoder_cache",
+    "encdec_loss_fn",
+]
+
+
+def _init_cross(key, cfg: ModelConfig) -> dict:
+    nh, nkv, hd = cfg.attn_dims()
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _dense(ks[0], (d, nh * hd)),
+        "wk": _dense(ks[1], (d, nkv * hd)),
+        "wv": _dense(ks[2], (d, nkv * hd)),
+        "wo": _dense(ks[3], (nh * hd, d)),
+    }
+
+
+def _cross_fwd(p, cfg: ModelConfig, x, enc_kv):
+    """Cross attention against precomputed encoder K/V."""
+    nh, nkv, hd = cfg.attn_dims()
+    b, s, d = x.shape
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, nh, hd)
+    out = _sdpa(q, enc_kv["k"], enc_kv["v"], causal=False)
+    return out.reshape(b, s, nh * hd) @ p["wo"].astype(x.dtype)
+
+
+def _init_enc_layer(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": init_rmsnorm(cfg.d_model),
+        "attn": init_gqa(k1, cfg),
+        "mlp_norm": init_rmsnorm(cfg.d_model),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.activation),
+    }
+
+
+def _init_dec_layer(key, cfg: ModelConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "attn_norm": init_rmsnorm(cfg.d_model),
+        "attn": init_gqa(k1, cfg),
+        "cross_norm": init_rmsnorm(cfg.d_model),
+        "cross": _init_cross(k2, cfg),
+        "mlp_norm": init_rmsnorm(cfg.d_model),
+        "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.activation),
+    }
+
+
+def init_encdec_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    ke, kd, kt, ko = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ke, cfg.n_encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    return {
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "enc_norm": init_rmsnorm(cfg.d_model),
+        "embed": _dense(kt, (cfg.vocab, cfg.d_model)),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "final_norm": init_rmsnorm(cfg.d_model),
+        "lm_head": _dense(ko, (cfg.d_model, cfg.vocab)),
+    }
+
+
+def encode(params: dict, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames: (b, enc_seq, d_model) precomputed frontend embeddings."""
+    b, s, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    noncausal = cfg.with_(attn=dataclasses.replace(cfg.attn, causal=False))
+
+    def body(x, p_l):
+        h, _ = gqa_fwd(p_l["attn"], noncausal, rmsnorm(p_l["attn_norm"], x, cfg.norm_eps), positions, None)
+        x = x + h
+        x = x + mlp_fwd(p_l["mlp"], rmsnorm(p_l["mlp_norm"], x, cfg.norm_eps), cfg.activation)
+        return x, None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, frames.astype(jnp.dtype(cfg.dtype)), params["enc_layers"])
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _enc_kv(params_dec_layer: dict, cfg: ModelConfig, enc_out: jax.Array) -> dict:
+    nh, nkv, hd = cfg.attn_dims()
+    b, s, _ = enc_out.shape
+    p = params_dec_layer["cross"]
+    k = (enc_out @ p["wk"].astype(enc_out.dtype)).reshape(b, s, nkv, hd)
+    v = (enc_out @ p["wv"].astype(enc_out.dtype)).reshape(b, s, nkv, hd)
+    return {"k": k, "v": v}
+
+
+def decode(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (b, s)
+    enc_out: jax.Array,  # (b, enc_seq, d)
+    cache: dict | None = None,
+) -> tuple[jax.Array, dict | None]:
+    x = params["embed"].astype(jnp.dtype(cfg.dtype))[tokens]
+    b, s, _ = x.shape
+    base = cache["layers"]["len"][0] if cache is not None else 0
+    positions = jnp.broadcast_to(base + jnp.arange(s)[None], (b, s))
+
+    def body(x, inp):
+        p_l, c_l = inp
+        h, c_new = gqa_fwd(p_l["attn"], cfg, rmsnorm(p_l["attn_norm"], x, cfg.norm_eps), positions, c_l)
+        x = x + h
+        kv = _enc_kv(p_l, cfg, enc_out)
+        x = x + _cross_fwd(p_l["cross"], cfg, rmsnorm(p_l["cross_norm"], x, cfg.norm_eps), kv)
+        x = x + mlp_fwd(p_l["mlp"], rmsnorm(p_l["mlp_norm"], x, cfg.norm_eps), cfg.activation)
+        return x, c_new
+
+    if cache is None:
+        nocache_body = lambda xx, pl: body(xx, (pl, None))
+        if cfg.remat != "none":
+            nocache_body = jax.checkpoint(nocache_body)
+        x, _ = jax.lax.scan(nocache_body, x, params["dec_layers"])
+        new_cache = None
+    else:
+        x, new_layers = jax.lax.scan(body, x, (params["dec_layers"], cache["layers"]))
+        new_cache = {"layers": new_layers}
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x @ params["lm_head"].astype(x.dtype), new_cache
+
+
+def init_decoder_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None) -> dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    layers = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[init_gqa_cache(cfg, batch, max_seq, dtype) for _ in range(cfg.n_layers)],
+    )
+    return {"layers": layers}
+
+
+def encdec_loss_fn(params, cfg: ModelConfig, frames, tokens, targets) -> jax.Array:
+    enc_out = encode(params, cfg, frames)
+    logits, _ = decode(params, cfg, tokens, enc_out)
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, cfg.vocab, dtype=logits.dtype)
+    gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    return (lse - gold).mean()

@@ -1,0 +1,677 @@
+"""Core transformer layers: norms, RoPE/M-RoPE, GQA + MLA attention, MLPs,
+and capacity-bucketed MoE with the paper's expert-replication technique.
+
+Everything is functional: ``init_*`` builds a param pytree (dict of jnp
+arrays), ``*_fwd`` applies it.  Layer stacks are scanned, so all ``init_*``
+are vmapped over the layer axis by the model assemblers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import AttnConfig, ModelConfig, MoEConfig
+
+# --------------------------------------------------------------------- norms
+
+
+def init_rmsnorm(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * p["scale"]).astype(dt)
+
+
+# ---------------------------------------------------------------------- RoPE
+
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64) / head_dim))
+
+
+def apply_rope(
+    x: jax.Array,  # (b, s, h, hd)
+    positions: jax.Array,  # (b, s) or (sections, b, s) for M-RoPE
+    theta: float,
+    mrope_sections: tuple[int, ...] = (),
+) -> jax.Array:
+    """Standard rotary embedding; with `mrope_sections` the frequency bands
+    are split across (t, h, w) position streams (Qwen2-VL M-RoPE)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), dtype=jnp.float32)  # (hd/2,)
+    if mrope_sections:
+        assert sum(mrope_sections) == hd // 2, (mrope_sections, hd)
+        if positions.ndim == 2:  # text-only: all streams share positions
+            positions = jnp.broadcast_to(
+                positions[None], (len(mrope_sections),) + positions.shape
+            )
+        parts = []
+        start = 0
+        for i, sec in enumerate(mrope_sections):
+            parts.append(positions[i][..., None] * freqs[start : start + sec])
+            start += sec
+        ang = jnp.concatenate(parts, axis=-1)  # (b, s, hd/2)
+    else:
+        ang = positions[..., None] * freqs  # (b, s, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ----------------------------------------------------------------- attention
+
+
+def _dense(key, shape, scale_axis=0):
+    fan_in = shape[scale_axis]
+    return (jax.random.normal(key, shape, jnp.float32) / np.sqrt(fan_in)).astype(
+        jnp.float32
+    )
+
+
+def init_gqa(key: jax.Array, cfg: ModelConfig) -> dict:
+    a = cfg.attn
+    nh, nkv, hd = cfg.attn_dims()
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense(ks[0], (d, nh * hd)),
+        "wk": _dense(ks[1], (d, nkv * hd)),
+        "wv": _dense(ks[2], (d, nkv * hd)),
+        "wo": _dense(ks[3], (nh * hd, d)),
+    }
+    if a.qkv_bias:
+        p["bq"] = jnp.zeros((nh * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((nkv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((nkv * hd,), jnp.float32)
+    return p
+
+
+_Q_CHUNK = 1024
+
+
+def _constrain_heads(t: jax.Array) -> jax.Array:
+    """with_sharding_constraint: (b, s, h, hd) -> heads over 'model', batch
+    over DP axes.  Without this, sharding propagated from neighboring ops
+    (e.g. the MoE EP path's sequence split) can pull attention into a
+    sequence-sharded layout whose masked-softmax needs cross-shard traffic
+    (§Perf deepseek iteration 3)."""
+    from jax.sharding import PartitionSpec as P
+
+    from ..distrib.context import get_mesh
+
+    mesh = get_mesh()
+    if mesh is None or "model" not in mesh.axis_names or t.ndim != 4:
+        return t
+    b, s, h, hd = t.shape
+    tp = mesh.shape["model"]
+    if h % tp != 0:
+        return t
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp_n = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    bspec = dp if (dp and b % dp_n == 0) else None
+    return jax.lax.with_sharding_constraint(t, P(bspec, None, "model", None))
+
+
+def _sdpa_block(q, k, v, causal, q_offset, kv_len):
+    """One dense attention block (q fits in memory against full kv)."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    qg = q.reshape(b, sq, kv, rep, hd)
+    scores = jnp.einsum("bqkrh,bskh->bkrqs", qg, k) / np.sqrt(hd)
+    sk = k.shape[1]
+    mask = None
+    if causal:
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(sk)
+        mask = qpos[:, None] >= kpos[None, :]
+    if kv_len is not None:
+        valid = jnp.arange(sk)[None, :] < kv_len
+        mask = valid if mask is None else (mask & valid)
+    if mask is not None:
+        scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkrqs,bskh->bqkrh", probs, v)
+    return out.reshape(b, sq, h, v.shape[-1])  # v head dim may differ (MLA)
+
+
+def _sdpa(
+    q: jax.Array,  # (b, sq, h, hd)
+    k: jax.Array,  # (b, sk, kv, hd)
+    v: jax.Array,  # (b, sk, kv, hd)
+    causal: bool,
+    q_offset: jax.Array | int = 0,
+    kv_len: jax.Array | None = None,
+    q_chunk: int = _Q_CHUNK,
+) -> jax.Array:
+    """Grouped scaled-dot-product attention, numerically-stable softmax.
+
+    Long query sequences are processed in q-chunks (lax.scan) so the live
+    score tensor is (b, h, q_chunk, sk) instead of (b, h, sq, sk) — the
+    memory-bounded formulation the dry-run lowers.  The Pallas flash kernel
+    (kernels/flash_attention.py) is the TPU-native replacement with
+    O(s * d) HBM traffic; see EXPERIMENTS.md §Perf.
+
+    q_offset: absolute position of q[0] (decode: cache length).
+    kv_len: number of valid kv entries (decode with preallocated cache).
+    """
+    b, sq, h, hd = q.shape
+    if sq <= 2 * q_chunk or sq % q_chunk != 0:
+        return _sdpa_block(q, k, v, causal, q_offset, kv_len)
+    nq = sq // q_chunk
+    qs = jnp.moveaxis(q.reshape(b, nq, q_chunk, h, hd), 1, 0)
+    offs = q_offset + jnp.arange(nq) * q_chunk
+
+    @jax.checkpoint  # don't save per-chunk probs (s^2 fp32) for backward
+    def body(_, inp):
+        qc, off = inp
+        return 0.0, _sdpa_block(qc, k, v, causal, off, kv_len)
+
+    _, out = jax.lax.scan(body, 0.0, (qs, offs))
+    return jnp.moveaxis(out, 0, 1).reshape(b, sq, h, v.shape[-1])
+
+
+def _decode_attn_seq_sharded(
+    q: jax.Array,  # (b, 1, h, hd) — replicated over 'model'
+    k: jax.Array,  # (b, S, kv, hd) — S sharded over 'model'
+    v: jax.Array,
+    kv_len: jax.Array,
+    mesh,
+) -> jax.Array:
+    """Distributed flash decode: each 'model' shard computes a partial
+    softmax (m, l, acc) over ITS slice of the KV cache; partials combine
+    with a pmax + two psums.  Replaces the all-gather of the full cache
+    (which dominated big-batch decode memory) with O(b*h*hd) collectives.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    b = q.shape[0]
+    dp_n = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    bspec = dp if (dp and b % dp_n == 0) else None
+    s_shard = k.shape[1] // mesh.shape["model"]
+
+    def local(q_l, k_l, v_l, kv_len_l):
+        bb, sq, h, hd = q_l.shape
+        kv = k_l.shape[2]
+        rep = h // kv
+        idx = jax.lax.axis_index("model")
+        kpos = idx * s_shard + jnp.arange(s_shard)
+        valid = kpos[None, :] < kv_len_l  # (1, s_shard)
+        qg = q_l.reshape(bb, sq, kv, rep, hd)
+        scores = jnp.einsum("bqkrh,bskh->bkrqs", qg, k_l) / np.sqrt(hd)
+        scores = jnp.where(valid[None, None, None], scores, -jnp.inf)
+        m_l = scores.max(axis=-1, keepdims=True)
+        m_g = jax.lax.pmax(m_l, "model")
+        m_g = jnp.maximum(m_g, -1e30)  # guard all-masked shards
+        p_ = jnp.exp(jnp.maximum(scores, -1e30) - m_g)
+        l_g = jax.lax.psum(p_.sum(axis=-1, keepdims=True), "model")
+        acc = jnp.einsum("bkrqs,bskh->bkrqh", p_.astype(v_l.dtype), v_l)
+        acc_g = jax.lax.psum(acc, "model")
+        out = acc_g / jnp.maximum(l_g, 1e-30).astype(acc_g.dtype)
+        return jnp.moveaxis(out, 3, 1).reshape(bb, sq, h, hd)
+
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(
+            P(bspec, None, None, None),
+            P(bspec, "model", None, None),
+            P(bspec, "model", None, None),
+            P(),
+        ),
+        out_specs=P(bspec, None, None, None),
+        check_rep=False,
+    )
+    return fn(q, k, v, kv_len)
+
+
+def gqa_fwd(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,  # (b, s, d)
+    positions: jax.Array,
+    cache: dict | None = None,
+) -> tuple[jax.Array, dict | None]:
+    """GQA attention.  With `cache`, runs a decode step appending s new
+    tokens (cache = {'k': (b, max_s, kv, hd), 'v': ..., 'len': int32})."""
+    a = cfg.attn
+    nh, nkv, hd = cfg.attn_dims()
+    b, s, d = x.shape
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if a.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = _constrain_heads(q.reshape(b, s, nh, hd))
+    k = _constrain_heads(k.reshape(b, s, nkv, hd))
+    v = _constrain_heads(v.reshape(b, s, nkv, hd))
+    q_offset = 0 if cache is None else cache["len"]
+    q = apply_rope(q, positions, a.rope_theta, a.mrope_sections)
+    k = apply_rope(k, positions, a.rope_theta, a.mrope_sections)
+    if cache is None:
+        out = _sdpa(q, k, v, a.causal)
+        new_cache = None
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache["len"], axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache["len"], axis=1)
+        new_len = cache["len"] + s
+
+        from ..distrib.context import get_mesh
+
+        mesh = get_mesh()
+        tp = mesh.shape["model"] if mesh is not None and "model" in mesh.axis_names else 0
+        if (
+            tp
+            and s == 1
+            and a.causal
+            and nkv % tp != 0  # heads not shardable -> cache is seq-sharded
+            and ck.shape[1] % tp == 0
+        ):
+            out = _decode_attn_seq_sharded(q, ck, cv, new_len, mesh)
+        else:
+            out = _sdpa(q, ck, cv, a.causal, q_offset=q_offset, kv_len=new_len)
+        new_cache = {"k": ck, "v": cv, "len": new_len}
+    y = out.reshape(b, s, nh * hd) @ p["wo"].astype(x.dtype)
+    return y, new_cache
+
+
+def init_gqa_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> dict:
+    _, nkv, hd = cfg.attn_dims()
+    return {
+        "k": jnp.zeros((batch, max_seq, nkv, hd), dtype),
+        "v": jnp.zeros((batch, max_seq, nkv, hd), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+# ------------------------------------------------------------------ MLA (DSv2)
+
+
+def init_mla(key: jax.Array, cfg: ModelConfig) -> dict:
+    a = cfg.attn
+    d = cfg.d_model
+    nh = a.n_heads
+    qk = a.qk_nope_dim + a.qk_rope_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "wdq": _dense(ks[0], (d, a.q_lora_rank)),
+        "q_norm": init_rmsnorm(a.q_lora_rank),
+        "wuq": _dense(ks[1], (a.q_lora_rank, nh * qk)),
+        "wdkv": _dense(ks[2], (d, a.kv_lora_rank)),
+        "kv_norm": init_rmsnorm(a.kv_lora_rank),
+        "wkr": _dense(ks[3], (d, a.qk_rope_dim)),
+        "wuk": _dense(ks[4], (a.kv_lora_rank, nh * a.qk_nope_dim)),
+        "wuv": _dense(ks[5], (a.kv_lora_rank, nh * a.v_head_dim)),
+        "wo": _dense(ks[6], (nh * a.v_head_dim, d)),
+    }
+
+
+def mla_fwd(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: dict | None = None,
+) -> tuple[jax.Array, dict | None]:
+    """Multi-head Latent Attention.  The decode cache stores only the
+    compressed c_kv (kv_lora_rank) + shared rope key — DeepSeek-V2's memory
+    saving — and up-projects per step."""
+    a = cfg.attn
+    nh = a.n_heads
+    b, s, d = x.shape
+    cq = rmsnorm(p["q_norm"], x @ p["wdq"].astype(x.dtype), cfg.norm_eps)
+    q = _constrain_heads(
+        (cq @ p["wuq"].astype(x.dtype)).reshape(b, s, nh, a.qk_nope_dim + a.qk_rope_dim)
+    )
+    q_nope, q_rope = jnp.split(q, [a.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, a.rope_theta)
+
+    ckv = rmsnorm(p["kv_norm"], x @ p["wdkv"].astype(x.dtype), cfg.norm_eps)
+    k_rope = apply_rope(
+        (x @ p["wkr"].astype(x.dtype))[:, :, None, :], positions, a.rope_theta
+    )  # (b, s, 1, rope_dim) — shared across heads
+
+    if cache is not None:
+        ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv, cache["len"], 1)
+        k_rope = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope, cache["len"], 1
+        )
+        new_len = cache["len"] + s
+        new_cache = {"ckv": ckv, "k_rope": k_rope, "len": new_len}
+        kv_len, q_offset = new_len, cache["len"]
+    else:
+        new_cache, kv_len, q_offset = None, None, 0
+
+    k_nope = _constrain_heads(
+        (ckv @ p["wuk"].astype(x.dtype)).reshape(-1, ckv.shape[1], nh, a.qk_nope_dim)
+    )
+    v = _constrain_heads(
+        (ckv @ p["wuv"].astype(x.dtype)).reshape(-1, ckv.shape[1], nh, a.v_head_dim)
+    )
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:3] + (a.qk_rope_dim,))], axis=-1
+    )
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = _sdpa(q_full, k, v, a.causal, q_offset=q_offset, kv_len=kv_len)
+    y = out.reshape(b, s, nh * a.v_head_dim) @ p["wo"].astype(x.dtype)
+    return y, new_cache
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> dict:
+    a = cfg.attn
+    return {
+        "ckv": jnp.zeros((batch, max_seq, a.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_seq, 1, a.qk_rope_dim), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+# ----------------------------------------------------------------------- MLP
+
+
+def init_mlp(key: jax.Array, d: int, ff: int, activation: str) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"w_up": _dense(ks[0], (d, ff)), "w_down": _dense(ks[1], (ff, d))}
+    if activation.endswith("_glu"):
+        p["w_gate"] = _dense(ks[2], (d, ff))
+    return p
+
+
+def mlp_fwd(p: dict, x: jax.Array, activation: str) -> jax.Array:
+    up = x @ p["w_up"].astype(x.dtype)
+    if activation == "silu_glu":
+        h = jax.nn.silu(x @ p["w_gate"].astype(x.dtype)) * up
+    elif activation == "gelu_glu":
+        h = jax.nn.gelu(x @ p["w_gate"].astype(x.dtype)) * up
+    elif activation == "sq_relu":  # Nemotron-4: squared ReLU
+        h = jnp.square(jax.nn.relu(up))
+    elif activation == "gelu":
+        h = jax.nn.gelu(up)
+    else:
+        raise ValueError(activation)
+    return h @ p["w_down"].astype(x.dtype)
+
+
+# ----------------------------------------------------------------------- MoE
+
+
+def expert_replication_table(replication: tuple[int, ...]) -> np.ndarray:
+    """Map logical expert -> slice of physical expert slots.
+
+    With replication (r_0 .. r_{E-1}) the physical weight array holds
+    sum(r_e) slots; slot order groups replicas of the same expert together.
+    Returns (E, 2) int [start, count].
+    """
+    starts = np.concatenate([[0], np.cumsum(replication)[:-1]])
+    return np.stack([starts, np.asarray(replication)], axis=1).astype(np.int32)
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    repl = m.replication or tuple([1] * m.n_experts)
+    n_phys = int(sum(repl))
+    ks = jax.random.split(key, 5)
+
+    def expert_bank(key, n):
+        kk = jax.random.split(key, 3)
+        bank = {
+            "w_up": _dense(kk[0], (n, d, m.d_ff_expert), scale_axis=1),
+            "w_down": _dense(kk[1], (n, m.d_ff_expert, d), scale_axis=1),
+        }
+        if cfg.activation.endswith("_glu"):
+            bank["w_gate"] = _dense(kk[2], (n, d, m.d_ff_expert), scale_axis=1)
+        return bank
+
+    p = {
+        "router": _dense(ks[0], (d, m.n_experts)),
+        "experts": expert_bank(ks[1], n_phys),
+    }
+    if m.n_shared:
+        p["shared"] = init_mlp(ks[2], d, m.n_shared * m.d_ff_expert, cfg.activation)
+    return p
+
+
+def _expert_ffn(bank: dict, x: jax.Array, activation: str) -> jax.Array:
+    """x: (E, C, d) -> (E, C, d), per-expert FFN via batched einsum."""
+    up = jnp.einsum("ecd,edf->ecf", x, bank["w_up"].astype(x.dtype))
+    if activation.endswith("_glu"):
+        gate = jnp.einsum("ecd,edf->ecf", x, bank["w_gate"].astype(x.dtype))
+        act = jax.nn.silu(gate) if activation == "silu_glu" else jax.nn.gelu(gate)
+        h = act * up
+    elif activation == "sq_relu":
+        h = jnp.square(jax.nn.relu(up))
+    else:
+        h = jax.nn.gelu(up)
+    return jnp.einsum("ecf,efd->ecd", h, bank["w_down"].astype(x.dtype))
+
+
+# Router-statistics capture (the paper's "profile the input distribution"
+# step).  When a list is installed via `capture_routing`, every EAGER (non-
+# jit) moe_fwd call appends its top-k expert ids — used by the offline
+# profile -> plan_replication -> redeploy flow.
+_ROUTING_CAPTURE: list | None = None
+
+
+class capture_routing:
+    def __init__(self):
+        self.records: list = []
+
+    def __enter__(self):
+        global _ROUTING_CAPTURE
+        _ROUTING_CAPTURE = self.records
+        return self.records
+
+    def __exit__(self, *exc):
+        global _ROUTING_CAPTURE
+        _ROUTING_CAPTURE = None
+        return False
+
+
+def _route_and_bucket(
+    p: dict, cfg: ModelConfig, xt: jax.Array, n_phys: int, capacity: int
+):
+    """Local (per-shard) top-k routing into capacity-bucketed slot buffers.
+
+    Returns (expert_in (n_phys, C, d), scatter state for the combine).
+    All indices are LOCAL — no cross-shard gathers, which is what keeps the
+    GSPMD/shard_map lowering communication-minimal.
+    """
+    m = cfg.moe
+    n_tok, d = xt.shape
+    logits = (xt @ p["router"].astype(xt.dtype)).astype(jnp.float32)  # (N, E)
+    gates, eids = jax.lax.top_k(logits, m.top_k)  # (N, k)
+    gates = jax.nn.softmax(gates, axis=-1)
+    if _ROUTING_CAPTURE is not None and not isinstance(eids, jax.core.Tracer):
+        _ROUTING_CAPTURE.append(np.asarray(eids))
+
+    repl = m.replication or tuple([1] * m.n_experts)
+    table = expert_replication_table(repl)
+    starts = jnp.asarray(table[:, 0])
+    counts = jnp.asarray(table[:, 1])
+    # round-robin replica choice per (token, k): the paper's 'next available
+    # duplicate' dispatch, deterministic so it stays SPMD.
+    tok_ids = jnp.arange(n_tok, dtype=jnp.int32)[:, None]
+    slot = starts[eids] + jnp.where(
+        counts[eids] > 1, (tok_ids + jnp.arange(m.top_k)[None]) % counts[eids], 0
+    )  # (N, k)
+
+    flat_slot = slot.reshape(-1)
+    flat_gate = gates.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(n_tok, dtype=jnp.int32), m.top_k)
+
+    order = jnp.argsort(flat_slot)
+    s_slot = flat_slot[order]
+    s_tok = flat_tok[order]
+    s_gate = flat_gate[order]
+    first = jnp.searchsorted(s_slot, jnp.arange(n_phys), side="left")
+    rank = jnp.arange(s_slot.size) - first[s_slot]
+    keep = rank < capacity
+    buf_idx = jnp.where(keep, s_slot * capacity + rank, n_phys * capacity)
+
+    buf = jnp.zeros((n_phys * capacity + 1, d), xt.dtype)
+    buf = buf.at[buf_idx].set(xt[s_tok], mode="drop")
+    expert_in = buf[:-1].reshape(n_phys, capacity, d)
+    return expert_in, (s_tok, s_gate, keep, buf_idx, n_tok)
+
+
+def _combine(expert_out: jax.Array, state, d: int) -> jax.Array:
+    s_tok, s_gate, keep, buf_idx, n_tok = state
+    n_slots = expert_out.shape[0] * expert_out.shape[1]
+    flat_out = expert_out.reshape(n_slots, d)
+    contrib = jnp.where(
+        keep[:, None], flat_out[jnp.minimum(buf_idx, n_slots - 1)], 0
+    )
+    y = jnp.zeros((n_tok, d), expert_out.dtype)
+    return y.at[s_tok].add(contrib * s_gate[:, None].astype(expert_out.dtype), mode="drop")
+
+
+def _moe_capacity(cfg: ModelConfig, n_tok: int, n_phys: int) -> int:
+    c = int(np.ceil(n_tok * cfg.moe.top_k / n_phys * cfg.moe.capacity_factor))
+    return max(c, 4)
+
+
+def moe_fwd(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Capacity-bucketed top-k MoE with optional expert replication.
+
+    Three dispatch paths:
+      * local (no mesh): everything on one shard — CPU tests.
+      * EP (shard_map): physical experts shard over the 'model' axis; tokens
+        shard over (dp..., 'model'); per-shard local routing then all-to-all
+        to expert owners and back.  Requires n_phys % tp == 0 — expert
+        REPLICATION (the paper's block-wise duplication) can make an
+        undivisible expert count divisible (e.g. Grok's 8 experts x2 on a
+        16-way axis), turning the allocation trick into a sharding enabler.
+      * TP (shard_map): expert count not divisible -> every expert's ff dim
+        shards over 'model'; routing is replicated per data shard and the
+        down-projection psums over 'model'.
+    """
+    from ..distrib.context import get_mesh
+
+    m = cfg.moe
+    b, s, d = x.shape
+    repl = m.replication or tuple([1] * m.n_experts)
+    n_phys = int(sum(repl))
+    mesh = get_mesh()
+
+    def shared_out(xt):
+        return mlp_fwd(p["shared"], xt, cfg.activation) if m.n_shared else 0.0
+
+    if mesh is None or "model" not in mesh.axis_names:
+        xt = x.reshape(b * s, d)
+        cap = _moe_capacity(cfg, b * s, n_phys)
+        expert_in, state = _route_and_bucket(p, cfg, xt, n_phys, cap)
+        expert_out = _expert_ffn(p["experts"], expert_in, cfg.activation)
+        y = _combine(expert_out, state, d) + shared_out(xt)
+        return y.reshape(b, s, d)
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from ..distrib.sharding import moe_ep_axes
+
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    tp = mesh.shape["model"]
+    dp_n = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    batch_ok = b % dp_n == 0
+    bspec = dp if batch_ok else None
+
+    ep = moe_ep_axes(cfg, mesh, seq_len=s)
+    if ep:
+        # ---- EP over `ep` axes: tokens split over (dp, model); physical
+        # expert slots over ep (possibly ('data','model') = full 2D EP when
+        # replication pads n_phys to the full group — the paper's block
+        # duplication enabling maximal expert sharding).
+        ep_n = int(np.prod([mesh.shape[a] for a in ep]))
+        seq_split = tp if s % tp == 0 else 1
+        n_local = (b // dp_n if batch_ok else b) * (s // seq_split)
+        cap = _moe_capacity(cfg, n_local, n_phys)
+
+        def ep_local(xl, router, experts, shared):
+            bl, sl, _ = xl.shape
+            xt = xl.reshape(bl * sl, d)
+            pl_ = {"router": router, "experts": experts}
+            expert_in, state = _route_and_bucket(pl_, cfg, xt, n_phys, cap)
+            # send each expert's bucket to its owner shard
+            expert_in = jax.lax.all_to_all(
+                expert_in, ep, split_axis=0, concat_axis=1, tiled=True
+            )  # (n_phys/ep_n, cap*ep_n, d)
+            expert_out = _expert_ffn(experts, expert_in, cfg.activation)
+            expert_out = jax.lax.all_to_all(
+                expert_out, ep, split_axis=1, concat_axis=0, tiled=True
+            )  # (n_phys, cap, d)
+            y = _combine(expert_out, state, d)
+            if m.n_shared:
+                y = y + mlp_fwd(shared, xt, cfg.activation)
+            return y.reshape(bl, sl, d)
+
+        ep_spec = ep if len(ep) > 1 else ep[0]
+        in_specs = (
+            P(bspec, "model" if seq_split > 1 else None, None),
+            P(None, None),
+            jax.tree.map(lambda _: P(ep_spec, None, None), p["experts"]),
+            jax.tree.map(lambda _: P(None, None), p.get("shared", {})),
+        )
+        fn = shard_map(
+            ep_local,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=P(bspec, "model" if seq_split > 1 else None, None),
+            check_rep=False,
+        )
+        return fn(x, p["router"], p["experts"], p.get("shared", {}))
+
+    # ---- TP: routing replicated across model; expert ff dim sharded.
+    # With serve_ff_2d the ff dim shards over ('data','model') — 2D
+    # weight-stationary slicing for huge experts — and tokens replicate
+    # (decode batches are tiny; the psum spans both axes).
+    ff_2d = (
+        m.serve_ff_2d
+        and "data" in mesh.axis_names
+        and m.d_ff_expert % (mesh.shape["data"] * tp) == 0
+    )
+    ff_axes = ("data", "model") if ff_2d else ("model",)
+    x_spec = P(None, None, None) if ff_2d else P(bspec, None, None)
+    n_local = b * s if ff_2d else (b // dp_n if batch_ok else b) * s
+    cap = _moe_capacity(cfg, n_local, n_phys)
+
+    def tp_local(xl, router, experts, shared):
+        bl, sl, _ = xl.shape
+        xt = xl.reshape(bl * sl, d)
+        pl_ = {"router": router, "experts": experts}
+        expert_in, state = _route_and_bucket(pl_, cfg, xt, n_phys, cap)
+        expert_out = _expert_ffn(experts, expert_in, cfg.activation)
+        expert_out = jax.lax.psum(expert_out, ff_axes)
+        y = _combine(expert_out, state, d)
+        if m.n_shared:
+            y = y + mlp_fwd(shared, xt, cfg.activation)  # replicated weights
+        return y.reshape(bl, sl, d)
+
+    ffs = ff_axes if len(ff_axes) > 1 else ff_axes[0]
+    expert_specs = jax.tree.map(
+        lambda a: P(None, None, ffs) if a.shape[-1] == m.d_ff_expert else P(None, ffs, None),
+        p["experts"],
+    )
+    shared_specs = jax.tree.map(lambda _: P(None, None), p.get("shared", {}))
+    fn = shard_map(
+        tp_local,
+        mesh=mesh,
+        in_specs=(x_spec, P(None, None), expert_specs, shared_specs),
+        out_specs=x_spec,
+        check_rep=False,
+    )
+    return fn(x, p["router"], p["experts"], p.get("shared", {}))

@@ -1,0 +1,351 @@
+"""Decoder-only LM assembler for dense / MoE / SSM / hybrid families.
+
+* ``init_params``     — parameter pytree; homogeneous layer stacks are
+                        vmap-initialized with a leading layer axis and scanned
+                        at apply time (flat HLO, depth-independent compile).
+* ``forward``         — training/prefill forward; with a cache pytree it
+                        appends to preallocated KV/SSM state (prefill s>1 or
+                        decode s=1 use the same path).
+* ``init_cache``      — preallocated decode state for a (batch, max_seq).
+* ``loss_fn``         — causal LM cross-entropy (fp32 logsumexp, z-loss).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import (
+    _dense,
+    gqa_fwd,
+    init_gqa,
+    init_gqa_cache,
+    init_mla,
+    init_mla_cache,
+    init_mlp,
+    init_moe,
+    init_rmsnorm,
+    mla_fwd,
+    mlp_fwd,
+    moe_fwd,
+    rmsnorm,
+)
+from .ssm import (
+    init_mamba2,
+    init_mamba2_cache,
+    mamba2_fwd,
+    mamba2_step,
+)
+
+__all__ = ["init_params", "forward", "init_cache", "loss_fn"]
+
+
+# ------------------------------------------------------------------ init
+
+
+def _init_attn(key, cfg: ModelConfig) -> dict:
+    return init_mla(key, cfg) if cfg.attn.kind == "mla" else init_gqa(key, cfg)
+
+
+def _init_block(key, cfg: ModelConfig) -> dict:
+    """One transformer block (attention + mlp/moe) with pre-norms."""
+    k1, k2 = jax.random.split(key)
+    p = {
+        "attn_norm": init_rmsnorm(cfg.d_model),
+        "attn": _init_attn(k1, cfg),
+        "mlp_norm": init_rmsnorm(cfg.d_model),
+    }
+    if cfg.family == "moe":
+        p["moe"] = init_moe(k2, cfg)
+    else:
+        p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.activation)
+    return p
+
+
+def _init_ssm_block(key, cfg: ModelConfig) -> dict:
+    return {"norm": init_rmsnorm(cfg.d_model), "mamba": init_mamba2(key, cfg)}
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    ke, kl, kh, ko = jax.random.split(key, 4)
+    p: dict = {"embed": _dense(ke, (cfg.vocab, cfg.d_model))}
+    L = cfg.n_layers
+    layer_keys = jax.random.split(kl, L)
+    if cfg.family in ("dense", "moe"):
+        p["layers"] = jax.vmap(lambda k: _init_block(k, cfg))(layer_keys)
+    elif cfg.family == "ssm":
+        p["layers"] = jax.vmap(lambda k: _init_ssm_block(k, cfg))(layer_keys)
+    elif cfg.family == "hybrid":
+        p["layers"] = jax.vmap(lambda k: _init_ssm_block(k, cfg))(layer_keys)
+        p["shared_block"] = _init_block(kh, cfg)
+    else:
+        raise ValueError(f"init_params: unsupported family {cfg.family}")
+    p["final_norm"] = init_rmsnorm(cfg.d_model)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = _dense(ko, (cfg.d_model, cfg.vocab))
+    return p
+
+
+# ------------------------------------------------------------------ cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None) -> dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    L = cfg.n_layers
+
+    def stack(make):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *[make() for _ in range(L)])
+
+    if cfg.family in ("dense", "moe"):
+        if cfg.attn.kind == "mla":
+            layers = stack(lambda: init_mla_cache(cfg, batch, max_seq, dtype))
+        else:
+            layers = stack(lambda: init_gqa_cache(cfg, batch, max_seq, dtype))
+        return {"layers": layers}
+    if cfg.family == "ssm":
+        return {"layers": stack(lambda: init_mamba2_cache(cfg, batch, dtype))}
+    if cfg.family == "hybrid":
+        n_sites = cfg.n_layers // cfg.shared_every
+        sites = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[init_gqa_cache(cfg, batch, max_seq, dtype) for _ in range(n_sites)],
+        )
+        return {
+            "layers": stack(lambda: init_mamba2_cache(cfg, batch, dtype)),
+            "shared_sites": sites,
+        }
+    raise ValueError(cfg.family)
+
+
+# ------------------------------------------------------------------ blocks
+
+
+def _block_fwd(p, cfg: ModelConfig, x, positions, cache):
+    attn_fn = mla_fwd if cfg.attn.kind == "mla" else gqa_fwd
+    h, new_cache = attn_fn(p["attn"], cfg, rmsnorm(p["attn_norm"], x, cfg.norm_eps), positions, cache)
+    x = x + h
+    z = rmsnorm(p["mlp_norm"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        x = x + moe_fwd(p["moe"], cfg, z)
+    else:
+        x = x + mlp_fwd(p["mlp"], z, cfg.activation)
+    return x, new_cache
+
+
+def _ssm_block_fwd(p, cfg: ModelConfig, x, cache):
+    z = rmsnorm(p["norm"], x, cfg.norm_eps)
+    if cache is None:
+        h, _ = mamba2_fwd(p["mamba"], cfg, z)
+        return x + h, None
+    if x.shape[1] == 1:
+        h, new_cache = mamba2_step(p["mamba"], cfg, z, cache)
+        return x + h, new_cache
+    # prefill with state carry-out: run full scan, update ssm state; the conv
+    # rolling caches keep their (d_conv - 1) windows (prefill fills them via
+    # the in-sequence conv; a production prefill would also refresh them —
+    # exactness is covered by the s=1 step path).
+    h, S = mamba2_fwd(p["mamba"], cfg, z, init_state=cache["ssm"].astype(z.dtype))
+    new_cache = dict(cache, ssm=S)
+    return x + h, new_cache
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _block_size(L: int) -> int:
+    """Divisor of L nearest sqrt(L): sqrt-depth nested remat block size."""
+    best, target = 1, L**0.5
+    for k in range(1, L + 1):
+        if L % k == 0 and abs(k - target) < abs(best - target):
+            best = k
+    return best
+
+
+def _scan_layers(body, x, stacked, cfg: ModelConfig):
+    """Scan a homogeneous layer stack with sqrt(L) two-level remat.
+
+    Peak saved activations drop from O(L) layer inputs to
+    O(L/k + k) block/layer inputs (k ~ sqrt(L)) at ~1 extra forward of
+    recompute — the standard memory/compute trade for deep stacks.
+    """
+    L = cfg.n_layers
+    k = _block_size(L) if cfg.remat != "none" else 1
+    if k <= 1 or k == L:
+        wrapped = _maybe_remat(body, cfg)
+        x, _ = jax.lax.scan(wrapped, x, stacked)
+        return x
+
+    inner = _maybe_remat(body, cfg)
+    blocked = jax.tree.map(lambda a: a.reshape((L // k, k) + a.shape[1:]), stacked)
+
+    def block_body(xx, p_blk):
+        xx, _ = jax.lax.scan(inner, xx, p_blk)
+        return xx, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(block_body), x, blocked)
+    return x
+
+
+# ------------------------------------------------------------------ forward
+
+
+def forward(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (b, s) int32
+    cache: dict | None = None,
+    positions: jax.Array | None = None,
+) -> tuple[jax.Array, dict | None]:
+    """Returns (logits (b, s, vocab), new_cache)."""
+    x = params["embed"].astype(jnp.dtype(cfg.dtype))[tokens]
+    b, s, _ = x.shape
+    if positions is None:
+        if cache is not None and cfg.family in ("dense", "moe"):
+            base = cache["layers"]["len"][0]  # lens stacked (L,), all equal
+        elif cache is not None and cfg.family == "hybrid":
+            base = cache["shared_sites"]["len"][0]
+        else:
+            base = 0
+        positions = jnp.broadcast_to(base + jnp.arange(s)[None, :], (b, s))
+
+    if cfg.family in ("dense", "moe"):
+
+        def body(x, inp):
+            p_l, c_l = inp
+            x, c_new = _block_fwd(p_l, cfg, x, positions, c_l)
+            return x, c_new
+
+        layer_cache = cache["layers"] if cache is not None else None
+        if layer_cache is None:
+            x = _scan_layers(
+                lambda xx, pl: (body(xx, (pl, None))[0], None), x, params["layers"], cfg
+            )
+            new_cache = None
+        else:
+            x, new_layer_cache = jax.lax.scan(body, x, (params["layers"], layer_cache))
+            new_cache = {"layers": new_layer_cache}
+
+    elif cfg.family == "ssm":
+
+        def body(x, inp):
+            p_l, c_l = inp
+            return _ssm_block_fwd(p_l, cfg, x, c_l)
+
+        if cache is None:
+            x = _scan_layers(
+                lambda xx, pl: (_ssm_block_fwd(pl, cfg, xx, None)[0], None),
+                x,
+                params["layers"],
+                cfg,
+            )
+            new_cache = None
+        else:
+            x, new_layers = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+            new_cache = {"layers": new_layers}
+
+    elif cfg.family == "hybrid":
+        if cache is None and cfg.shared_every and cfg.n_layers >= cfg.shared_every:
+            # Train/prefill-without-cache: scan over GROUPS of
+            # (shared_every mamba layers + 1 shared attention block).  The
+            # shared block's weights are a scan closure constant (weight
+            # sharing = the paper's duplication in reverse); group-level
+            # remat keeps saved activations to O(n_sites + shared_every).
+            n_sites = cfg.n_layers // cfg.shared_every
+            main = n_sites * cfg.shared_every
+            grouped = jax.tree.map(
+                lambda a: a[:main].reshape((n_sites, cfg.shared_every) + a.shape[1:]),
+                params["layers"],
+            )
+
+            def inner(xx, p_l):
+                return _ssm_block_fwd(p_l, cfg, xx, None)[0], None
+
+            inner_w = _maybe_remat(inner, cfg)
+
+            def group(xx, p_grp):
+                xx, _ = jax.lax.scan(inner_w, xx, p_grp)
+                xx, _ = _block_fwd(params["shared_block"], cfg, xx, positions, None)
+                return xx, None
+
+            group_w = jax.checkpoint(group) if cfg.remat != "none" else group
+            x, _ = jax.lax.scan(group_w, x, grouped)
+            for i in range(main, cfg.n_layers):  # remainder layers
+                p_l = jax.tree.map(lambda a, i=i: a[i], params["layers"])
+                body = _maybe_remat(
+                    lambda xx, pp: _ssm_block_fwd(pp, cfg, xx, None), cfg
+                )
+                x, _ = body(x, p_l)
+            new_cache = None
+        else:
+            # Decode/prefill-with-cache: python loop (site-specific KV cache
+            # breaks scan homogeneity; decode layer cost is tiny).
+            new_layers, new_sites = [], []
+            site = 0
+            for i in range(cfg.n_layers):
+                p_l = jax.tree.map(lambda a, i=i: a[i], params["layers"])
+                c_l = (
+                    jax.tree.map(lambda a, i=i: a[i], cache["layers"]) if cache else None
+                )
+                x, c_new = _ssm_block_fwd(p_l, cfg, x, c_l)
+                if cache is not None:
+                    new_layers.append(c_new)
+                if cfg.shared_every and (i + 1) % cfg.shared_every == 0:
+                    sc = (
+                        jax.tree.map(lambda a, s=site: a[s], cache["shared_sites"])
+                        if cache
+                        else None
+                    )
+                    x, sc_new = _block_fwd(params["shared_block"], cfg, x, positions, sc)
+                    if cache is not None:
+                        new_sites.append(sc_new)
+                    site += 1
+            if cache is not None:
+                new_cache = {
+                    "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *new_layers),
+                    "shared_sites": jax.tree.map(lambda *xs: jnp.stack(xs), *new_sites),
+                }
+            else:
+                new_cache = None
+    else:
+        raise ValueError(cfg.family)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = (
+        params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    ).astype(x.dtype)
+    logits = x @ head
+    return logits, new_cache
+
+
+# ------------------------------------------------------------------ loss
+
+
+def loss_fn(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (b, s)
+    targets: jax.Array,  # (b, s)
+    z_loss: float = 1e-4,
+) -> jax.Array:
+    logits, _ = forward(params, cfg, tokens)
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # one-hot contraction instead of take_along_axis: stays sharded over the
+    # vocab axis (a gather would all-gather the full fp32 logits).
+    onehot = jax.nn.one_hot(targets, cfg.vocab, dtype=logits.dtype)
+    gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    nll = lse - gold
+    loss = nll.mean()
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse).mean()
+    return loss

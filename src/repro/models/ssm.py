@@ -1,0 +1,253 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD algorithm in pure JAX (`ssd_chunked`) used for training/prefill,
+O(1)-state `ssd_step` for decode (this is what makes the 500k-token
+long-context shape feasible), and a depthwise conv frontend with a rolling
+cache.  The per-chunk compute hot-spot also exists as a Pallas TPU kernel in
+``repro.kernels.ssd_scan`` validated against this reference.
+
+Projections are SEPARATE matrices (wz/wx/wB/wC/wdt rather than one fused
+in_proj) so tensor-parallel sharding boundaries align with the logical
+splits: heads shard over the `model` mesh axis, the SSD recurrence is
+embarrassingly parallel across heads.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import _dense, init_rmsnorm, rmsnorm
+
+__all__ = [
+    "init_mamba2",
+    "mamba2_fwd",
+    "mamba2_step",
+    "init_mamba2_cache",
+    "ssd_chunked",
+    "ssd_step",
+]
+
+
+# ------------------------------------------------------------------ SSD core
+
+
+def ssd_chunked(
+    x: jax.Array,  # (b, s, h, p)   inputs (already conv'd / activated)
+    dt: jax.Array,  # (b, s, h)      softplus'd step sizes
+    A: jax.Array,  # (h,)           negative decay rates
+    B: jax.Array,  # (b, s, n)      input projection (n_groups=1, shared)
+    C: jax.Array,  # (b, s, n)      output projection
+    chunk: int = 128,
+    init_state: jax.Array | None = None,  # (b, h, n, p)
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked state-space-duality scan.  Returns (y (b,s,h,p), final_state)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+
+    dA = dtc * A  # (b, nc, Q, h) log-decay, negative
+    cum = jnp.cumsum(dA, axis=2)
+    xdt = xc * dtc[..., None]
+
+    # --- intra-chunk (quadratic within the chunk) ---
+    # L[i, j, h] = exp(cum_i - cum_j) for i >= j.  Computed in HEAD BLOCKS of
+    # `head_group` so the (Q, Q, h) decay tensor never lives all at once —
+    # at (b=16, nc=32, Q=128, h=32) the full tensor is >1 GB/layer and was
+    # the dominant HBM term of the hybrid/ssm train cells (§Perf).  The
+    # Pallas kernel (kernels/ssd_scan.py) keeps it in VMEM entirely.
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)  # (b,nc,Q,Q)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    head_group = min(8, h)
+
+    def _intra(args):
+        cum_g, xdt_g = args  # (b,nc,Q,hb), (b,nc,Q,hb,p)
+        diff = cum_g[:, :, :, None, :] - cum_g[:, :, None, :, :]
+        # mask BEFORE exp: exp of the (discarded) upper triangle overflows
+        # and poisons gradients through jnp.where otherwise.
+        L = jnp.exp(jnp.where(tri, diff, -jnp.inf)).astype(x.dtype)
+        return jnp.einsum("bcqk,bcqkh,bckhp->bcqhp", scores, L, xdt_g)
+
+    if h > head_group and h % head_group == 0:
+        hg = h // head_group
+        cum_s = jnp.moveaxis(
+            cum.reshape(b, nc, chunk, hg, head_group), 3, 0
+        )  # (hg, b, nc, Q, hb)
+        xdt_s = jnp.moveaxis(xdt.reshape(b, nc, chunk, hg, head_group, p), 3, 0)
+        y_blocks = jax.lax.map(jax.checkpoint(_intra), (cum_s, xdt_s))
+        y_intra = jnp.moveaxis(y_blocks, 0, 3).reshape(b, nc, chunk, h, p)
+    else:
+        y_intra = _intra((cum, xdt))
+
+    # --- chunk summary states ---
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (b,nc,Q,h)
+    S_chunk = jnp.einsum("bckh,bckn,bckhp->bchnp", decay_to_end, Bc, xdt)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (b,nc,h)
+
+    # --- inter-chunk recurrence (scan over chunks) ---
+    S0 = (
+        jnp.zeros((b, h, n, p), x.dtype)
+        if init_state is None
+        else init_state.astype(x.dtype)
+    )
+
+    def step(S, inp):
+        S_c, dec = inp  # (b,h,n,p), (b,h)
+        S_prev = S
+        S_new = dec[:, :, None, None] * S + S_c
+        return S_new, S_prev
+
+    S_final, S_prevs = jax.lax.scan(
+        step,
+        S0,
+        (jnp.moveaxis(S_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)  # (b, nc, h, n, p)
+
+    y_inter = jnp.einsum(
+        "bcqh,bcqn,bchnp->bcqhp", jnp.exp(cum).astype(x.dtype), Cc, S_prevs
+    )
+    y = (y_intra + y_inter).reshape(b, nc * chunk, h, p)
+    return y[:, :s], S_final
+
+
+def ssd_step(
+    state: jax.Array,  # (b, h, n, p)
+    x: jax.Array,  # (b, h, p)
+    dt: jax.Array,  # (b, h)
+    A: jax.Array,  # (h,)
+    B: jax.Array,  # (b, n)
+    C: jax.Array,  # (b, n)
+) -> tuple[jax.Array, jax.Array]:
+    """Single-token recurrence: S <- exp(dt A) S + dt B (x);  y = C S."""
+    dA = jnp.exp(dt * A)  # (b, h)
+    upd = jnp.einsum("bn,bhp->bhnp", B, x * dt[..., None])
+    S = dA[:, :, None, None] * state + upd
+    y = jnp.einsum("bn,bhnp->bhp", C, S)
+    return y, S
+
+
+# ------------------------------------------------------------------- block
+
+
+def init_mamba2(key: jax.Array, cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    gn = s.n_groups * s.d_state
+    ks = jax.random.split(key, 6)
+    return {
+        "wz": _dense(ks[0], (d, di)),
+        "wx": _dense(ks[1], (d, di)),
+        "wB": _dense(ks[2], (d, gn)),
+        "wC": _dense(ks[3], (d, gn)),
+        "wdt": _dense(ks[4], (d, nh)),
+        "conv_x_w": _dense(ks[5], (s.d_conv, di)) * 0.1,
+        "conv_x_b": jnp.zeros((di,), jnp.float32),
+        "conv_B_w": jnp.zeros((s.d_conv, gn), jnp.float32).at[-1].set(1.0),
+        "conv_B_b": jnp.zeros((gn,), jnp.float32),
+        "conv_C_w": jnp.zeros((s.d_conv, gn), jnp.float32).at[-1].set(1.0),
+        "conv_C_b": jnp.zeros((gn,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "gate_norm": init_rmsnorm(di),
+        "out_proj": _dense(ks[0], (di, d)),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d over (b, s, ch) + SiLU."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(k))
+    return jax.nn.silu(out + b.astype(x.dtype))
+
+
+def _project(p: dict, cfg: ModelConfig, x: jax.Array):
+    z = x @ p["wz"].astype(x.dtype)
+    xi = x @ p["wx"].astype(x.dtype)
+    B = x @ p["wB"].astype(x.dtype)
+    C = x @ p["wC"].astype(x.dtype)
+    dt = x @ p["wdt"].astype(x.dtype)
+    return z, xi, B, C, dt
+
+
+def mamba2_fwd(
+    p: dict, cfg: ModelConfig, x: jax.Array, init_state=None
+) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence Mamba2 block: (b, s, d) -> (b, s, d), final SSM state."""
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    di = s_cfg.d_inner(d)
+    nh = s_cfg.n_heads(d)
+    z, xin, B, C, dt = _project(p, cfg, x)
+    xin = _causal_conv(xin, p["conv_x_w"], p["conv_x_b"])
+    B = _causal_conv(B, p["conv_B_w"], p["conv_B_b"])
+    C = _causal_conv(C, p["conv_C_w"], p["conv_C_b"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"]).astype(x.dtype)
+    A = -jnp.exp(p["A_log"]).astype(x.dtype)
+    xh = xin.reshape(b, s, nh, s_cfg.head_dim)
+    y, S = ssd_chunked(xh, dt, A, B, C, chunk=s_cfg.chunk, init_state=init_state)
+    y = y + p["D"].astype(x.dtype)[None, None, :, None] * xh
+    y = y.reshape(b, s, di)
+    y = rmsnorm(p["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ p["out_proj"].astype(x.dtype), S
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    gn = s.n_groups * s.d_state
+    return {
+        "conv_x": jnp.zeros((batch, s.d_conv - 1, di), dtype),
+        "conv_B": jnp.zeros((batch, s.d_conv - 1, gn), dtype),
+        "conv_C": jnp.zeros((batch, s.d_conv - 1, gn), dtype),
+        "ssm": jnp.zeros((batch, nh, s.d_state, s.head_dim), dtype),
+    }
+
+
+def _conv_step(window: jax.Array, new: jax.Array, w, b):
+    """window: (b, k-1, ch) rolling cache; new: (b, ch)."""
+    full = jnp.concatenate([window, new[:, None]], axis=1)  # (b, k, ch)
+    out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", full, w.astype(new.dtype)) + b.astype(new.dtype)
+    )
+    return out, full[:, 1:]
+
+
+def mamba2_step(
+    p: dict, cfg: ModelConfig, x: jax.Array, cache: dict
+) -> tuple[jax.Array, dict]:
+    """Single-token decode: (b, 1, d) -> (b, 1, d) with O(1) state."""
+    s_cfg = cfg.ssm
+    b = x.shape[0]
+    di = s_cfg.d_inner(cfg.d_model)
+    nh = s_cfg.n_heads(cfg.d_model)
+    z, xin, B, C, dt = _project(p, cfg, x[:, 0])
+    xin, conv_x = _conv_step(cache["conv_x"], xin, p["conv_x_w"], p["conv_x_b"])
+    B, conv_B = _conv_step(cache["conv_B"], B, p["conv_B_w"], p["conv_B_b"])
+    C, conv_C = _conv_step(cache["conv_C"], C, p["conv_C_w"], p["conv_C_b"])
+    dt1 = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"]).astype(x.dtype)
+    A = -jnp.exp(p["A_log"]).astype(x.dtype)
+    xh = xin.reshape(b, nh, s_cfg.head_dim)
+    y, S = ssd_step(cache["ssm"].astype(x.dtype), xh, dt1, A, B, C)
+    y = y + p["D"].astype(x.dtype)[None, :, None] * xh
+    y = y.reshape(b, 1, di)
+    y = rmsnorm(p["gate_norm"], y * jax.nn.silu(z[:, None, :]), cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, {"conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C, "ssm": S}

@@ -1,0 +1,80 @@
+"""Gradient compression for cross-pod reduction.
+
+At 2+ pods the `pod` axis rides the slowest links (data-center network /
+optical ICI), so the standard trick is hierarchical reduction with the
+inter-pod hop compressed: reduce fp32/bf16 WITHIN a pod, then all-reduce
+int8-quantized gradients ACROSS pods, with error feedback so quantization
+error is carried to the next step instead of lost (Seide et al.'s 1-bit SGD
+residual trick, at int8).
+
+`compressed_psum(x, axis)` is used inside a shard_map over the pod axis;
+`make_compressed_train_step` wires it into the training step with
+`auto=` for the other mesh axes (GSPMD keeps handling data/model).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "quantize_int8",
+    "dequantize_int8",
+    "compressed_psum",
+    "init_error_feedback",
+    "apply_error_feedback",
+]
+
+
+def quantize_int8(x: jax.Array, key: jax.Array | None = None):
+    """Per-tensor symmetric int8 with optional stochastic rounding.
+
+    Returns (q int8, scale f32)."""
+    scale = jnp.max(jnp.abs(x)).astype(jnp.float32) / 127.0 + 1e-30
+    y = x.astype(jnp.float32) / scale
+    if key is not None:
+        y = jnp.floor(y + jax.random.uniform(key, y.shape))
+    else:
+        y = jnp.round(y)
+    return jnp.clip(y, -127, 127).astype(jnp.int8), scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(
+    x: jax.Array, axis: str, axis_size: int, key: jax.Array | None = None
+):
+    """int8 mean-reduce over `axis` with the int8 payload ON THE WIRE.
+
+    A naive ``psum(q.astype(s32))`` would put s32 on the links (zero
+    savings); instead we ring-rotate the int8 tensor (axis_size - 1
+    collective-permutes of s8 + one f32 scalar each) and accumulate locally
+    in s32 — 4x less inter-pod traffic than an fp32 all-reduce, visible as
+    ``collective-permute(s8[...])`` in the dry-run HLO.
+
+    Returns (mean-reduced value, local quantization error for feedback)."""
+    q, scale = quantize_int8(x, key)
+    err = x.astype(jnp.float32) - dequantize_int8(q, scale)
+    idx = jax.lax.axis_index(axis)
+    perm = [(i, (i + 1) % axis_size) for i in range(axis_size)]
+    total = dequantize_int8(q, scale)
+    rq, rs = q, scale
+    for _ in range(axis_size - 1):
+        rq = jax.lax.ppermute(rq, axis, perm)
+        rs = jax.lax.ppermute(rs, axis, perm)
+        total = total + dequantize_int8(rq, rs)
+    del idx
+    return (total / axis_size).astype(x.dtype), err
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def apply_error_feedback(grads, residual):
+    """Add last step's quantization error before compressing this step."""
+    return jax.tree.map(lambda g, r: g.astype(jnp.float32) + r, grads, residual)

@@ -1,0 +1,129 @@
+"""Slot-based decode engine with PER-SLOT cache positions.
+
+This is the paper's block-wise dataflow at the request level: a decode slot
+is a "generalized compute unit"; when a request finishes, the slot refills
+from the queue immediately instead of waiting for the whole batch (static
+batching = the paper's layer-wise gather barrier; continuous batching =
+next-available-block dispatch).
+
+Per-slot state means per-sample cache lengths: writes scatter at
+``lens[b]`` and attention masks per sample — the engine implements that
+attention variant here (GQA archs), leaving the homogeneous-batch paths in
+``models/layers.py`` untouched.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import ModelConfig
+from ..models.layers import apply_rope, mlp_fwd, rmsnorm
+
+__all__ = ["init_slot_state", "slot_decode_step", "reset_slots", "prefill_slot"]
+
+
+def init_slot_state(cfg: ModelConfig, n_slots: int, max_seq: int, dtype=None) -> dict:
+    """Stacked per-layer KV (L, b, S, kv, hd) + per-SLOT lengths (b,)."""
+    assert cfg.family == "dense" and cfg.attn.kind == "gqa", (
+        "slot engine covers GQA dense archs; other families use launch/serve"
+    )
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    _, nkv, hd = cfg.attn_dims()
+    L = cfg.n_layers
+    return {
+        "k": jnp.zeros((L, n_slots, max_seq, nkv, hd), dtype),
+        "v": jnp.zeros((L, n_slots, max_seq, nkv, hd), dtype),
+        "lens": jnp.zeros((n_slots,), jnp.int32),
+    }
+
+
+def _slot_attn(p, cfg: ModelConfig, x, k_cache, v_cache, lens):
+    """One token per slot against per-slot cache lengths.
+
+    x: (b, d);  k_cache/v_cache: (b, S, kv, hd);  lens: (b,) pre-write lens.
+    Returns (out (b, d), new_k, new_v)."""
+    a = cfg.attn
+    nh, nkv, hd = cfg.attn_dims()
+    b, d = x.shape
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if a.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(b, 1, nh, hd)
+    k = k.reshape(b, 1, nkv, hd)
+    v = v.reshape(b, 1, nkv, hd)
+    pos = lens[:, None]  # (b, 1) — per-slot positions
+    q = apply_rope(q, pos, a.rope_theta, a.mrope_sections)
+    k = apply_rope(k, pos, a.rope_theta, a.mrope_sections)
+    # per-slot scatter at lens[b]
+    bi = jnp.arange(b)
+    k_cache = k_cache.at[bi, lens].set(k[:, 0])
+    v_cache = v_cache.at[bi, lens].set(v[:, 0])
+    # per-sample masked attention over the full cache
+    rep = nh // nkv
+    qg = q.reshape(b, nkv, rep, hd)
+    scores = jnp.einsum("bkrh,bskh->bkrs", qg, k_cache) / np.sqrt(hd)
+    valid = jnp.arange(k_cache.shape[1])[None, :] <= lens[:, None]  # (b, S)
+    scores = jnp.where(valid[:, None, None, :], scores, jnp.finfo(scores.dtype).min)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkrs,bskh->bkrh", probs, v_cache)
+    y = out.reshape(b, nh * hd) @ p["wo"].astype(x.dtype)
+    return y, k_cache, v_cache
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def slot_decode_step(params, cfg: ModelConfig, state: dict, tokens: jax.Array):
+    """tokens (b,) -> (logits (b, vocab), new state).  Each slot advances
+    by one at its OWN position."""
+    x = params["embed"].astype(jnp.dtype(cfg.dtype))[tokens]  # (b, d)
+    lens = state["lens"]
+
+    def body(x, inp):
+        p_l, kc, vc = inp
+        h, kc, vc = _slot_attn(
+            p_l["attn"], cfg, rmsnorm(p_l["attn_norm"], x, cfg.norm_eps), kc, vc, lens
+        )
+        x = x + h
+        x = x + mlp_fwd(p_l["mlp"], rmsnorm(p_l["mlp_norm"], x, cfg.norm_eps), cfg.activation)
+        return x, (kc, vc)
+
+    x, (new_k, new_v) = jax.lax.scan(
+        body, x, (params["layers"], state["k"], state["v"])
+    )
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"]).astype(x.dtype)
+    logits = x @ head
+    new_state = {"k": new_k, "v": new_v, "lens": lens + 1}
+    return logits, new_state
+
+
+def reset_slots(state: dict, slot_mask: jax.Array) -> dict:
+    """Zero the lengths (and lazily the cache validity) of refilled slots.
+    slot_mask: (b,) bool — True = slot is being handed to a new request."""
+    lens = jnp.where(slot_mask, 0, state["lens"])
+    # stale kv beyond lens is masked by the per-sample valid mask; no need to
+    # zero the buffers (same trick as paged-attention slot reuse).
+    return dict(state, lens=lens)
+
+
+def prefill_slot(params, cfg: ModelConfig, state: dict, tokens, slot_mask):
+    """Feed prompt tokens (b, P) one step at a time into masked slots.
+    Slots where slot_mask is False keep their state (their lens don't move
+    because we re-assert them after)."""
+    keep_lens = state["lens"]
+    last_logits = None
+    for t in range(tokens.shape[1]):
+        logits, state = slot_decode_step(params, cfg, state, tokens[:, t])
+        last_logits = logits
+    # restore untouched slots' lengths (their cache rows were overwritten at
+    # their own positions; acceptable for the demo engine, a production
+    # engine would gather/scatter only the masked slots)
+    lens = jnp.where(slot_mask, state["lens"], keep_lens)
+    return last_logits, dict(state, lens=lens)

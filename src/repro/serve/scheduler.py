@@ -1,0 +1,101 @@
+"""Static vs continuous batching — the paper's barrier analysis for serving.
+
+Static batching: B requests start together; the batch completes when the
+LONGEST generation finishes (the synchronization barrier; utilization =
+mean(len)/max(len), the exact shape of the paper's Fig 6 block-skew loss).
+
+Continuous batching: a finished slot refills from the queue on the next
+step (the paper's "send work to the next available block").
+
+`simulate_*` are analytic slot-step counters (the serving counterpart of
+core/cim/simulate.py); `Scheduler` drives the real slot engine
+(serve/engine.py) for the runnable demo.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = [
+    "WorkloadConfig",
+    "sample_lengths",
+    "simulate_static",
+    "simulate_continuous",
+    "BatchingStats",
+]
+
+
+@dataclass(frozen=True)
+class WorkloadConfig:
+    n_requests: int = 256
+    mean_len: float = 128.0
+    dist: str = "lognormal"  # request generation-length distribution
+    sigma: float = 0.8
+    seed: int = 0
+
+
+def sample_lengths(cfg: WorkloadConfig) -> np.ndarray:
+    rng = np.random.default_rng(cfg.seed)
+    if cfg.dist == "lognormal":
+        mu = np.log(cfg.mean_len) - cfg.sigma**2 / 2
+        out = rng.lognormal(mu, cfg.sigma, cfg.n_requests)
+    elif cfg.dist == "uniform":
+        out = rng.uniform(1, 2 * cfg.mean_len, cfg.n_requests)
+    else:
+        raise ValueError(cfg.dist)
+    return np.maximum(out.astype(np.int64), 1)
+
+
+@dataclass(frozen=True)
+class BatchingStats:
+    total_steps: int
+    slot_steps_used: int
+    slot_steps_alloc: int
+    mean_latency: float
+
+    @property
+    def utilization(self) -> float:
+        return self.slot_steps_used / self.slot_steps_alloc
+
+    @property
+    def throughput(self) -> float:
+        """completed tokens per slot-step."""
+        return self.slot_steps_used / self.total_steps
+
+
+def simulate_static(lengths: np.ndarray, n_slots: int) -> BatchingStats:
+    total, used, lat = 0, 0, []
+    for i in range(0, lengths.size, n_slots):
+        batch = lengths[i : i + n_slots]
+        steps = int(batch.max())
+        total += steps
+        used += int(batch.sum())
+        lat.extend((total - steps + batch).tolist())  # finish times
+    return BatchingStats(total, used, total * n_slots, float(np.mean(lat)))
+
+
+def simulate_continuous(lengths: np.ndarray, n_slots: int) -> BatchingStats:
+    """Event simulation: each step every busy slot decodes one token;
+    empty slots refill from the queue immediately."""
+    remaining = list(lengths[::-1])
+    slots = np.zeros(n_slots, dtype=np.int64)  # tokens left per slot
+    t, used, lat = 0, 0, []
+    active = 0
+    while remaining or active:
+        for s in range(n_slots):
+            if slots[s] == 0 and remaining:
+                slots[s] = remaining.pop()
+                active += 1
+        busy = slots > 0
+        if not busy.any():
+            break
+        slots[busy] -= 1
+        used += int(busy.sum())
+        t += 1
+        done = busy & (slots == 0)
+        for _ in range(int(done.sum())):
+            lat.append(t)
+            active -= 1
+    return BatchingStats(t, used, t * n_slots, float(np.mean(lat)))

@@ -1,0 +1,148 @@
+"""Expert replication + pipeline stage partitioning (the paper's allocation
+algorithms at the distributed-runtime level)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.alloc.expert import (
+    drop_rate,
+    expected_max_load,
+    plan_replication,
+    profile_expert_histogram,
+)
+from repro.core.alloc.pipeline_stages import bottleneck, partition_stages, stage_costs
+
+
+# ------------------------------------------------------------------- experts
+def _skewed_hist(e=16, alpha=1.2, seed=0):
+    rng = np.random.default_rng(seed)
+    h = rng.pareto(alpha, size=e) + 0.05
+    return h / h.sum()
+
+
+def test_replication_reduces_max_load():
+    hist = _skewed_hist()
+    base = expected_max_load(hist, n_tokens=4096, top_k=2)
+    plan = plan_replication(hist, slot_budget=32)
+    repl = expected_max_load(plan, n_tokens=4096, top_k=2)
+    assert repl < base * 0.75  # barrier relief
+
+
+def test_replication_reduces_drop_rate():
+    hist = _skewed_hist(seed=1)
+    base = drop_rate(hist, n_tokens=4096, top_k=2, capacity_factor=1.25)
+    plan = plan_replication(hist, slot_budget=32)
+    repl = drop_rate(plan, n_tokens=4096, top_k=2, capacity_factor=1.25)
+    assert repl < base
+
+
+def test_replication_grants_follow_load():
+    hist = np.array([0.5, 0.3, 0.1, 0.1])
+    plan = plan_replication(hist, slot_budget=8)
+    r = np.asarray(plan.replication)
+    assert r[0] >= r[1] >= r[2]
+    assert plan.n_physical == 8
+
+
+def test_pad_to_mesh_divisible():
+    """DeepSeek-V2 on (16, 16): 160 experts padded to 256 slots -> 2D EP."""
+    hist = _skewed_hist(e=160, seed=2)
+    plan = plan_replication(hist, slot_budget=256, pad_to=256)
+    assert plan.n_physical == 256
+    assert plan.balance > 0.3  # hot experts split toward the mean
+
+
+def test_histogram_profiling():
+    rng = np.random.default_rng(0)
+    logits = rng.normal(size=(1000, 8))
+    logits[:, 0] += 2.0  # expert 0 is hot
+    hist = profile_expert_histogram(logits, top_k=2)
+    assert hist.argmax() == 0
+    assert np.isclose(hist.sum(), 1.0)
+
+
+@given(st.integers(4, 32).flatmap(lambda e: st.tuples(
+    st.lists(st.floats(0.01, 10), min_size=e, max_size=e),
+    st.integers(0, 64),
+)))
+@settings(max_examples=50, deadline=None)
+def test_plan_properties(args):
+    raw, extra = args
+    hist = np.asarray(raw) / np.sum(raw)
+    plan = plan_replication(hist, slot_budget=hist.size + extra)
+    assert plan.n_physical == hist.size + extra
+    assert min(plan.replication) >= 1
+    # slot loads sum back to 1
+    assert np.isclose(plan.slot_load.sum(), 1.0)
+    # replication never increases the max slot load
+    assert plan.max_slot_load <= hist.max() + 1e-12
+
+
+# -------------------------------------------------------------------- stages
+def test_equal_count_vs_cost_based():
+    """The paper's perf-based allocation beats count-based on skewed costs."""
+    costs = np.array([1, 1, 1, 1, 10, 10, 1, 1], dtype=float)
+    P = 4
+    naive = [(i * 2, i * 2 + 2) for i in range(P)]  # equal layer counts
+    smart = partition_stages(costs, P)
+    assert bottleneck(costs, smart) <= bottleneck(costs, naive)
+    assert bottleneck(costs, smart) == 10  # optimal: [1111][10][10][11]
+
+
+def test_partition_covers_all_layers():
+    costs = np.arange(1, 13, dtype=float)
+    stages = partition_stages(costs, 5)
+    assert stages[0][0] == 0 and stages[-1][1] == 12
+    for (a, b), (c, d) in zip(stages, stages[1:]):
+        assert b == c
+
+
+@given(st.integers(2, 24).flatmap(lambda L: st.tuples(
+    st.lists(st.floats(0.1, 100), min_size=L, max_size=L),
+    st.integers(2, 8),
+)))
+@settings(max_examples=50, deadline=None)
+def test_partition_optimality_lower_bound(args):
+    raw, P = args
+    costs = np.asarray(raw)
+    stages = partition_stages(costs, min(P, costs.size))
+    got = bottleneck(costs, stages)
+    # can't beat max single layer or the perfect-split average
+    assert got >= max(costs.max(), costs.sum() / min(P, costs.size)) - 1e-9
+    # and must be no worse than one-stage-per... the equal-count heuristic
+    L, Pn = costs.size, min(P, costs.size)
+    step = -(-L // Pn)
+    naive = [(min(i * step, L), min((i + 1) * step, L)) for i in range(Pn)]
+    assert got <= bottleneck(costs, naive) + 1e-9
+
+def test_profile_plan_redeploy_loop():
+    """The paper's workflow end-to-end: capture REAL routing from an MoE,
+    plan replication, verify relief (condensed from
+    examples/expert_replication_flow.py)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.distrib.context import set_mesh
+    from repro.models import init_params
+    from repro.models.layers import capture_routing
+    from repro.models.lm import _block_fwd
+
+    set_mesh(None)
+    cfg = get_config("deepseek-v2-236b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(3))
+    toks = jax.random.randint(jax.random.PRNGKey(4), (2, 32), 0, cfg.vocab)
+    with capture_routing() as records:
+        x = params["embed"].astype(jnp.dtype(cfg.dtype))[toks]
+        pos = jnp.broadcast_to(jnp.arange(32)[None], (2, 32))
+        for i in range(cfg.n_layers):
+            p_l = jax.tree.map(lambda a, i=i: a[i], params["layers"])
+            x, _ = _block_fwd(p_l, cfg, x, pos, None)
+    assert len(records) == cfg.n_layers
+    eids = np.concatenate([r.reshape(-1) for r in records])
+    assert eids.min() >= 0 and eids.max() < cfg.moe.n_experts
+    hist = np.bincount(eids, minlength=cfg.moe.n_experts).astype(float)
+    hist /= hist.sum()
+    plan = plan_replication(hist, slot_budget=cfg.moe.n_experts + 4)
+    assert plan.max_slot_load <= hist.max()

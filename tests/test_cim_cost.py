@@ -1,0 +1,88 @@
+"""Unit + property tests for the crossbar cost model."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cim.cost import (
+    ArrayConfig,
+    DEFAULT_ARRAY,
+    baseline_cycles,
+    bitplane_ones,
+    expected_cycles_from_density,
+    zskip_cycles,
+)
+
+
+def test_cycle_range_matches_paper():
+    """Paper: 'each array takes anywhere from 64 to 1024 cycles'."""
+    assert DEFAULT_ARRAY.min_cycles() == 64
+    assert DEFAULT_ARRAY.max_cycles() == 1024
+    assert DEFAULT_ARRAY.logical_cols == 16  # 128x16 dot product per array
+
+
+def test_zero_input_hits_min():
+    x = np.zeros(128, dtype=np.uint8)
+    assert zskip_cycles(x) == 64
+
+
+def test_all_ones_hits_max():
+    x = np.full(128, 255, dtype=np.uint8)
+    assert zskip_cycles(x) == 1024
+
+
+def test_baseline_is_worst_case():
+    assert baseline_cycles(128) == 1024
+    assert baseline_cycles(64) == 512
+
+
+def test_bitplane_ones_simple():
+    # 0b10000001 = 129: MSB and LSB planes set.
+    x = np.array([129, 129], dtype=np.uint8)
+    ones = bitplane_ones(x)
+    assert ones.tolist() == [2, 0, 0, 0, 0, 0, 0, 2]
+
+
+@given(
+    st.integers(1, 128).flatmap(
+        lambda r: st.lists(st.integers(0, 255), min_size=r, max_size=r)
+    )
+)
+@settings(max_examples=200, deadline=None)
+def test_zskip_never_exceeds_baseline(vals):
+    """Property: zero-skipping only ever helps (paper Section III)."""
+    x = np.asarray(vals, dtype=np.uint8)
+    z = int(zskip_cycles(x))
+    b = int(baseline_cycles(len(vals)))
+    assert DEFAULT_ARRAY.min_cycles() <= z <= b
+
+
+@given(st.lists(st.integers(0, 255), min_size=16, max_size=128))
+@settings(max_examples=100, deadline=None)
+def test_monotone_in_bits(vals):
+    """Adding '1' bits can only increase (or keep) cycle count."""
+    x = np.asarray(vals, dtype=np.uint8)
+    denser = x | np.asarray(
+        np.random.default_rng(0).integers(0, 256, size=x.shape), dtype=np.uint8
+    )
+    assert int(zskip_cycles(denser)) >= int(zskip_cycles(x))
+
+
+def test_expected_cycles_linear_in_density():
+    """Paper Fig 4: linear relationship between density and cycles."""
+    d = np.linspace(0.1, 0.9, 9)
+    e = expected_cycles_from_density(d, 128)
+    diffs = np.diff(e)
+    assert np.allclose(diffs, diffs[0])  # exactly linear above the floor
+    assert e[0] < e[-1]
+
+
+def test_expected_matches_monte_carlo():
+    rng = np.random.default_rng(1)
+    p = 0.3
+    # uint8 values with iid bit density p
+    bits = (rng.random((4096, 128, 8)) < p).astype(np.uint8)
+    vals = np.packbits(bits, axis=-1)[..., 0]
+    mc = zskip_cycles(vals).mean()
+    analytic = float(expected_cycles_from_density(p, 128))
+    assert abs(mc - analytic) / analytic < 0.08

@@ -1,0 +1,51 @@
+"""Network -> crossbar mapping tests (the paper's published counts)."""
+
+import numpy as np
+
+from repro.core.cim.network import resnet18_imagenet, vgg11_cifar10
+
+
+def test_resnet18_counts_match_paper():
+    spec = resnet18_imagenet()
+    assert len(spec.layers) == 20  # "20 convolutional layers in ResNet18"
+    assert spec.n_arrays == 5472  # "minimum number of arrays (5472)"
+    assert spec.n_blocks == 247  # "there are 247 blocks"
+    assert spec.min_pes(64) == 86  # "we begin at 86 PEs"
+
+
+def test_fig5_layer10_tiling():
+    """Fig 5: the 3x3x128x128 filter -> 72 arrays in a 9x8 grid."""
+    spec = resnet18_imagenet()
+    layer = next(l for l in spec.layers if l.name == "layer2.0.conv2")
+    assert layer.n_blocks == 9
+    assert layer.arrays_per_block == 8
+    assert layer.n_arrays == 72
+
+
+def test_layer15_block_count():
+    """Paper: layer 15 (3x3x256x256) contains 18 blocks."""
+    spec = resnet18_imagenet()
+    layer = next(l for l in spec.layers if l.name == "layer3.1.conv1")
+    assert layer.rows == 3 * 3 * 256
+    assert layer.n_blocks == 18
+
+
+def test_block_slices_cover_rows():
+    for spec in (resnet18_imagenet(), vgg11_cifar10()):
+        for layer in spec.layers:
+            slices = layer.block_row_slices()
+            assert len(slices) == layer.n_blocks
+            covered = sum(s.stop - s.start for s in slices)
+            assert covered == layer.rows
+            assert slices[0].start == 0 and slices[-1].stop == layer.rows
+
+
+def test_block_table_shape():
+    spec = resnet18_imagenet()
+    tbl = spec.block_table()
+    assert tbl.shape == (247, 3)
+    assert tbl[:, 0].max() == 19
+    # widths are arrays_per_block of the owning layer
+    for li, layer in enumerate(spec.layers):
+        w = tbl[tbl[:, 0] == li][:, 2]
+        assert np.all(w == layer.arrays_per_block)

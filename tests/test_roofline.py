@@ -1,0 +1,97 @@
+"""HLO static analyzer + roofline math on hand-written HLO and real lowered
+programs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hlo_analysis import analyze_hlo
+from repro.core.roofline import HW, Roofline, collective_stats
+
+HLO_SAMPLE = """
+HloModule test
+
+%body.1 (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8] get-tuple-element(%p), index=1
+  %w = f32[8,8] constant({...})
+  %dot.1 = f32[8,8] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8] all-reduce(%dot.1), replica_groups={}, to_apply=%add
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%ni, %ar)
+}
+
+%cond.1 (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %lim = s32[] constant(12)
+  ROOT %cmp = pred[] compare(%i, %lim), direction=LT
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,8]) tuple(%zero, %a)
+  %w2 = (s32[], f32[8,8]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %out = f32[8,8] get-tuple-element(%w2), index=1
+}
+"""
+
+
+def test_while_trip_count_multiplies():
+    cost = analyze_hlo(HLO_SAMPLE)
+    assert cost.n_while == 1
+    assert cost.trip_counts == (12,)
+    # dot: 2*8*8*8 = 1024 flops, x12 loop iterations
+    assert cost.flops == 1024 * 12
+    # all-reduce operand: 8*8*4 bytes, x12
+    assert cost.collective_bytes == 256 * 12
+    assert cost.coll_count == {"all-reduce": 12}
+
+
+def test_analyzer_vs_real_lowering():
+    """Scan of L matmuls must report ~L x the single-matmul flops."""
+    L, D = 7, 64
+    w = jnp.zeros((L, D, D))
+
+    def f(x, w):
+        def body(x, wl):
+            return x @ wl, None
+
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+
+    compiled = jax.jit(f).lower(jnp.zeros((D, D)), w).compile()
+    cost = analyze_hlo(compiled.as_text())
+    expect = 2 * D * D * D * L
+    assert expect * 0.9 <= cost.flops <= expect * 1.2
+
+
+def test_roofline_terms():
+    r = Roofline(
+        flops=197e12 * 256,          # exactly 1 s of compute on 256 chips
+        bytes_accessed=819e9 * 128,  # 0.5 s of HBM
+        collective_bytes=50e9 * 64,  # 0.25 s of ICI
+        chips=256,
+        model_flops=197e12 * 128,    # half the issued flops are useful
+    )
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(0.5)
+    assert r.collective_s == pytest.approx(0.25)
+    assert r.bottleneck == "compute"
+    assert r.useful_flop_fraction == pytest.approx(0.5)
+    assert r.roofline_fraction == pytest.approx(0.5)
+
+
+def test_collective_stats_parser():
+    st = collective_stats(
+        "%ag = bf16[4,8]{1,0} all-gather(bf16[2,8]{1,0} %x), dimensions={0}\n"
+        "%ar = f32[16]{0} all-reduce(%y), to_apply=%add\n"
+    )
+    # all-gather counts its (inline-shaped) operand: 2*8*2 bytes
+    assert st.bytes_by_op["all-gather"] == 32
+    assert st.bytes_by_op["all-reduce"] == 64
+    assert st.total_count == 2
