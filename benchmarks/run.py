@@ -1,8 +1,11 @@
 """Benchmark harness — one function per paper table/figure plus the
-TPU-analogue benches.  Prints ``name,us_per_call,derived`` CSV rows.
+TPU-analogue and fabric-runtime benches.  Prints ``name,us_per_call,derived``
+CSV rows; ``--json out.json`` additionally writes every row + detail line as
+machine-readable JSON for perf tracking across PRs.
 
-  PYTHONPATH=src python -m benchmarks.run            # everything
-  PYTHONPATH=src python -m benchmarks.run fig8 fig9  # subset
+  PYTHONPATH=src python -m benchmarks.run                    # everything
+  PYTHONPATH=src python -m benchmarks.run fig8 fig9          # subset
+  PYTHONPATH=src python -m benchmarks.run --json out.json fabric_tail
 """
 
 from __future__ import annotations
@@ -11,6 +14,9 @@ import sys
 import time
 
 import numpy as np
+
+_JSON_ROWS: list[dict] = []
+_JSON_DETAILS: list[list] = []
 
 
 def _timeit(fn, repeats=3):
@@ -23,6 +29,12 @@ def _timeit(fn, repeats=3):
 
 def _row(name, us, derived):
     print(f"{name},{us:.1f},{derived}")
+    _JSON_ROWS.append({"name": name, "us_per_call": round(us, 1), "derived": derived})
+
+
+def _detail(*fields):
+    print("#" + ",".join(str(f) for f in fields))
+    _JSON_DETAILS.append(list(fields))
 
 
 # --------------------------------------------------------------------- paper
@@ -50,7 +62,7 @@ def fig4():
     us = _timeit(lambda: expected_cycles_from_density(dens, 128))
     _row("fig4_cycles_vs_density", us, f"pearson_r={r:.3f}")
     for lp in prof.layers:
-        print(f"#fig4,{lp.name},{lp.density:.4f},{lp.mean_cycles.mean():.1f}")
+        _detail("fig4", lp.name, f"{lp.density:.4f}", f"{lp.mean_cycles.mean():.1f}")
 
 
 def fig6():
@@ -62,7 +74,7 @@ def fig6():
         spread = lp.mean_cycles.max() / lp.mean_cycles.min() - 1
         rows.append((label, lp.mean_cycles, spread))
         for b, (d, c) in enumerate(zip(lp.block_density, lp.mean_cycles)):
-            print(f"#fig6,{label},block{b},{d:.4f},{c:.1f}")
+            _detail("fig6", label, f"block{b}", f"{d:.4f}", f"{c:.1f}")
     _row(
         "fig6_block_skew",
         0.0,
@@ -100,7 +112,7 @@ def fig8():
         )
         for pol, vals in results.items():
             for n, v in zip(sizes, vals):
-                print(f"#fig8,{netname},{pol},{n},{v:.1f}")
+                _detail("fig8", netname, pol, n, f"{v:.1f}")
 
 
 def ablation():
@@ -144,7 +156,7 @@ def fig9():
     )
     for pol, u in utils.items():
         for i, v in enumerate(u):
-            print(f"#fig9,{pol},layer{i},{v:.3f}")
+            _detail("fig9", pol, f"layer{i}", f"{v:.3f}")
 
 
 # ------------------------------------------------------------- TPU analogues
@@ -254,13 +266,121 @@ def roofline_table():
     _row("roofline_table", 0.0, f"cells_ok={n_ok};cells_total={len(recs)}")
     for r in recs:
         if r["status"] != "ok":
-            print(f"#roofline,{r['arch']},{r['shape']},mp={int(r['multi_pod'])},{r['status']}")
+            _detail("roofline", r["arch"], r["shape"], f"mp={int(r['multi_pod'])}", r["status"])
             continue
         ro = r["roofline"]
-        print(
-            f"#roofline,{r['arch']},{r['shape']},mp={int(r['multi_pod'])},"
-            f"{ro['compute_s']:.3f},{ro['memory_s']:.3f},{ro['collective_s']:.3f},"
-            f"{ro['bottleneck']},{ro['roofline_fraction']:.4f}"
+        _detail(
+            "roofline", r["arch"], r["shape"], f"mp={int(r['multi_pod'])}",
+            f"{ro['compute_s']:.3f}", f"{ro['memory_s']:.3f}",
+            f"{ro['collective_s']:.3f}", ro["bottleneck"],
+            f"{ro['roofline_fraction']:.4f}",
+        )
+
+
+# ------------------------------------------------------------ fabric runtime
+def fabric_tail():
+    """Tail latency under the same open-loop Poisson load: the paper's
+    block-wise dispatch vs the weight-based layer-wise baseline."""
+    from repro.core.cim import allocate, simulate
+    from repro.core.cim.simulate import CLOCK_HZ
+    from repro.fabric import FabricSim, PoissonOpen
+
+    spec, prof = _profile("vgg11")
+    pes = spec.min_pes() * 2
+    wb = allocate(spec, prof, "weight_based", pes)
+    bw = allocate(spec, prof, "blockwise", pes)
+    cap_wb = simulate(spec, prof, wb, n_images=64).images_per_sec
+    proc = PoissonOpen(n_requests=400, rate_per_cycle=0.7 * cap_wb / CLOCK_HZ, seed=5)
+    t0 = time.perf_counter()
+    r_wb = FabricSim(spec, prof, wb, seed=3).run(proc)
+    r_bw = FabricSim(spec, prof, bw, seed=3).run(proc)
+    us = (time.perf_counter() - t0) * 1e6
+    l_wb, l_bw = r_wb.latency_ms(), r_bw.latency_ms()
+    _row(
+        "fabric_tail_vgg11_poisson70",
+        us,
+        f"p99 {l_wb.p99:.3f}ms->{l_bw.p99:.3f}ms ({l_wb.p99/l_bw.p99:.2f}x);"
+        f"p50 {l_wb.p50:.3f}ms->{l_bw.p50:.3f}ms",
+    )
+    for name, st in (("weight_based", l_wb), ("blockwise", l_bw)):
+        _detail("fabric_tail", name, f"{st.p50:.4f}", f"{st.p95:.4f}", f"{st.p99:.4f}", f"{st.mean:.4f}")
+
+
+def fabric_drift():
+    """Distribution shift mid-serve: stale allocation vs EWMA-triggered
+    online re-allocation (warm-started greedy) vs clairvoyant oracle."""
+    from repro.core.cim import allocate
+    from repro.core.cim.simulate import ARRAYS_PER_PE
+    from repro.fabric import (
+        ClosedLoop,
+        DriftConfig,
+        FabricSim,
+        OnlineReallocator,
+        shift_profile,
+    )
+
+    spec, prof = _profile("vgg11")
+    pes = spec.min_pes() * 2
+    free = pes * ARRAYS_PER_PE - spec.n_arrays
+    reserve = 0.4
+    alloc0 = allocate(spec, prof, "blockwise", pes, free_budget=free * (1 - reserve))
+    shifted = shift_profile(prof, {4: 1.8, 5: 1.8, 6: 1.8})
+    cl = ClosedLoop(n_requests=120, concurrency=24)
+    t0 = time.perf_counter()
+    stale = FabricSim(spec, prof, alloc0, seed=2, live_prof=shifted).run(cl)
+    rl = OnlineReallocator(spec, prof, reserve_arrays=free * reserve, cfg=DriftConfig())
+    online = FabricSim(spec, prof, alloc0, seed=2, live_prof=shifted, reallocator=rl).run(cl)
+    oracle = FabricSim(spec, shifted, allocate(spec, shifted, "blockwise", pes), seed=2).run(cl)
+    us = (time.perf_counter() - t0) * 1e6
+    ts, to, torc = stale.images_per_sec, online.images_per_sec, oracle.images_per_sec
+    rec = (to - ts) / (torc - ts)
+    if online.reallocations:
+        ev = online.reallocations[0]
+        realloc = f"stall={ev.stall_cycles:.0f}cyc;arrays_added={ev.arrays_added}"
+    else:
+        realloc = "realloc=never_tripped"
+    _row(
+        "fabric_drift_vgg11_shift1.8x",
+        us,
+        f"stale={ts:.0f};online={to:.0f};oracle={torc:.0f};recovery={rec:.2f};{realloc}",
+    )
+    _detail("fabric_drift", "stale", f"{ts:.1f}")
+    _detail("fabric_drift", "online", f"{to:.1f}")
+    _detail("fabric_drift", "oracle", f"{torc:.1f}")
+
+
+def fabric_multitenant():
+    """ResNet18 + VGG11 sharing one fabric, weighted-fair allocation."""
+    from repro.core.cim.simulate import ARRAYS_PER_PE
+    from repro.fabric import ClosedLoop, Tenant, allocate_shared, fairness_report, run_tenants
+
+    rspec, rprof = _profile("resnet18")
+    vspec, vprof = _profile("vgg11")
+    tenants = [
+        Tenant("resnet18", rspec, rprof, weight=2.0),
+        Tenant("vgg11", vspec, vprof, weight=1.0),
+    ]
+    base = rspec.n_arrays + vspec.n_arrays
+    n_pes = -(-base // ARRAYS_PER_PE) * 2
+    t0 = time.perf_counter()
+    shared = allocate_shared(tenants, n_pes=n_pes)
+    results = run_tenants(shared, [ClosedLoop(60, 40), ClosedLoop(60, 16)], seed=0)
+    us = (time.perf_counter() - t0) * 1e6
+    rep = fairness_report(shared, results)
+    _row(
+        "fabric_multitenant_r18+vgg11",
+        us,
+        ";".join(
+            f"{n}:ips={d['images_per_sec']:.0f},p99={d['latency_ms_p99']:.2f}ms,arrays={d['arrays']}"
+            for n, d in rep["tenants"].items()
+        )
+        + f";balance={rep['weighted_rate_balance']:.2f}",
+    )
+    for n, d in rep["tenants"].items():
+        _detail(
+            "fabric_multitenant", n, d["weight"], d["arrays"],
+            f"{d['images_per_sec']:.1f}", f"{d['latency_ms_p99']:.3f}",
+            f"{d['mean_utilization']:.3f}",
         )
 
 
@@ -275,14 +395,39 @@ ALL = {
     "continuous_batching": continuous_batching,
     "kernels": kernels,
     "roofline_table": roofline_table,
+    "fabric_tail": fabric_tail,
+    "fabric_drift": fabric_drift,
+    "fabric_multitenant": fabric_multitenant,
 }
 
 
 def main() -> None:
-    names = sys.argv[1:] or list(ALL)
+    args = sys.argv[1:]
+    json_path = None
+    if "--json" in args:
+        i = args.index("--json")
+        try:
+            json_path = args[i + 1]
+        except IndexError:
+            raise SystemExit("--json needs an output path")
+        args = args[:i] + args[i + 2 :]
+    names = args or list(ALL)
+    unknown = [n for n in names if n not in ALL]
+    if unknown:
+        raise SystemExit(f"unknown bench(es) {unknown}; choose from {list(ALL)}")
     print("name,us_per_call,derived")
     for n in names:
         ALL[n]()
+    if json_path:
+        import json
+
+        with open(json_path, "w") as f:
+            json.dump(
+                {"benches": names, "rows": _JSON_ROWS, "details": _JSON_DETAILS},
+                f,
+                indent=2,
+            )
+        print(f"# wrote {json_path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

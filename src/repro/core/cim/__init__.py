@@ -10,7 +10,15 @@ from .cost import (
 )
 from .network import LayerSpec, NetworkSpec, resnet18_imagenet, vgg11_cifar10
 from .profile import NetworkProfile, LayerProfile, profile_network, synthetic_images
-from .simulate import Allocation, SimResult, allocate, run_policy, simulate
+from .simulate import (
+    Allocation,
+    SimResult,
+    allocate,
+    blockwise_units,
+    run_policy,
+    simulate,
+    split_block_dups,
+)
 
 __all__ = [
     "ArrayConfig",
@@ -30,6 +38,8 @@ __all__ = [
     "Allocation",
     "SimResult",
     "allocate",
+    "blockwise_units",
     "run_policy",
     "simulate",
+    "split_block_dups",
 ]

@@ -42,7 +42,16 @@ from ..alloc.greedy import greedy_allocate, proportional_allocate
 from .network import NetworkSpec
 from .profile import NetworkProfile
 
-__all__ = ["Policy", "Allocation", "SimResult", "allocate", "simulate", "run_policy"]
+__all__ = [
+    "Policy",
+    "Allocation",
+    "SimResult",
+    "allocate",
+    "simulate",
+    "run_policy",
+    "blockwise_units",
+    "split_block_dups",
+]
 
 Policy = Literal[
     "baseline",
@@ -92,18 +101,56 @@ def _layer_patch_cycles(prof: NetworkProfile, zskip: bool) -> list[np.ndarray]:
     return out
 
 
+def blockwise_units(
+    spec: NetworkSpec, block_mean_cycles: list[np.ndarray]
+) -> tuple[np.ndarray, np.ndarray]:
+    """Flattened per-block (base_latency, replica_cost) for greedy allocation.
+
+    ``block_mean_cycles``: per-layer (B_l,) expected cycles per patch — from
+    the profile, or from runtime-observed EWMA means (drift re-allocation).
+    """
+    base_lat, cost = [], []
+    for i, layer in enumerate(spec.layers):
+        mean_b = np.asarray(block_mean_cycles[i], dtype=np.float64)
+        ppi = float(layer.patches_per_image)
+        for b in range(layer.n_blocks):
+            base_lat.append(mean_b[b] * ppi)
+            cost.append(layer.arrays_per_block)
+    return np.asarray(base_lat), np.asarray(cost, dtype=np.float64)
+
+
+def split_block_dups(spec: NetworkSpec, replicas: np.ndarray) -> list[np.ndarray]:
+    """Inverse of ``blockwise_units``'s flattening: per-layer (B_l,) replica
+    arrays from the flat per-block vector (layers in order, blocks within)."""
+    out, k = [], 0
+    for layer in spec.layers:
+        out.append(np.asarray(replicas[k : k + layer.n_blocks]).copy())
+        k += layer.n_blocks
+    return out
+
+
 def allocate(
     spec: NetworkSpec,
     prof: NetworkProfile,
     policy: Policy,
     n_pes: int,
     arrays_per_pe: int = ARRAYS_PER_PE,
+    free_budget: float | None = None,
 ) -> Allocation:
+    """Pick replica counts.  ``free_budget`` caps the arrays spent on extra
+    replicas below the physical ``total - base`` (used to hold back a reserve
+    pool for online re-allocation)."""
     total = n_pes * arrays_per_pe
     base_arrays = spec.n_arrays
     if total < base_arrays:
         raise ValueError(f"{total} arrays < minimum {base_arrays} for {spec.name}")
     free = total - base_arrays
+    if free_budget is not None:
+        if not 0 <= free_budget <= free:
+            raise ValueError(
+                f"free_budget {free_budget} outside [0, {free}] free arrays"
+            )
+        free = float(free_budget)
     L = len(spec.layers)
     layer_arrays = np.array([l.n_arrays for l in spec.layers], dtype=np.float64)
     zskip = policy != "baseline"
@@ -133,20 +180,10 @@ def allocate(
 
     if policy == "blockwise":
         # one unit per block across the whole network
-        base_lat, cost, owner = [], [], []
-        for i, layer in enumerate(spec.layers):
-            mean_b = cyc[i].mean(axis=0)  # (B,)
-            for b in range(layer.n_blocks):
-                base_lat.append(mean_b[b] * ppi[i])
-                cost.append(layer.arrays_per_block)
-                owner.append(i)
-        res = greedy_allocate(np.asarray(base_lat), np.asarray(cost, dtype=np.float64), free)
-        block_dups: list[np.ndarray] = []
-        k = 0
-        for layer in spec.layers:
-            block_dups.append(res.replicas[k : k + layer.n_blocks].copy())
-            k += layer.n_blocks
-        used = int(base_arrays + ((res.replicas - 1) * np.asarray(cost)).sum())
+        base_lat, cost = blockwise_units(spec, [cyc[i].mean(axis=0) for i in range(L)])
+        res = greedy_allocate(base_lat, cost, free)
+        block_dups = split_block_dups(spec, res.replicas)
+        used = int(base_arrays + ((res.replicas - 1) * cost).sum())
         return Allocation(policy, None, block_dups, used, total)
 
     raise ValueError(policy)

@@ -129,7 +129,9 @@ def make_pipeline_fn(
         mine = jnp.where(stage == n_stages - 1, out_buf, 0.0)
         return jax.lax.psum(mine, "pipe")
 
-    return jax.shard_map(
+    from .compat import shard_map
+
+    return shard_map(
         local,
         mesh=mesh,
         in_specs=(P("pipe"), P()),

@@ -261,6 +261,9 @@ def cache_specs(cfg: ModelConfig, cache_shape: Any, mesh: Mesh) -> Any:
             return P(*((None,) * depth))
         batch = shape[0] if shape else 1
         bspec = dp if (dp and batch % int(np.prod([mesh.shape[a] for a in dp])) == 0) else None
+        if isinstance(bspec, tuple) and len(bspec) == 1:
+            bspec = bspec[0]  # P('data') == P(('data',)) semantically; older
+            # jax PartitionSpec __eq__ compares entries literally
         if name in ("k", "v"):
             # heads when they divide TP; otherwise shard the SEQUENCE dim
             # (sequence-parallel KV — keeps big caches resident)

@@ -1,0 +1,53 @@
+"""Discrete-event CIM fabric runtime.
+
+The analytic model (``core/cim/simulate.py``) answers "what is the
+steady-state pipelined throughput of this allocation"; this package answers
+the serving questions that need explicit time: tail latency under bursty
+arrivals, behavior when the live input distribution drifts off the profile
+(with online re-allocation from a reserve), and several networks sharing
+one fabric.  It executes the same ``NetworkSpec`` / ``NetworkProfile`` /
+``Allocation`` objects as the analytic model and agrees with it in the
+closed-loop steady state (asserted in tests).
+"""
+
+from .arrivals import ClosedLoop, PoissonOpen, TraceReplay, arrival_times
+from .dispatch import FabricSim
+from .drift import DriftConfig, OnlineReallocator, shift_profile
+from .events import EventCalendar, ServerPool
+from .metrics import (
+    FabricResult,
+    LatencyStats,
+    ReallocationEvent,
+    latency_stats,
+    steady_throughput,
+)
+from .tenancy import (
+    SharedAllocation,
+    Tenant,
+    allocate_shared,
+    fairness_report,
+    run_tenants,
+)
+
+__all__ = [
+    "ClosedLoop",
+    "PoissonOpen",
+    "TraceReplay",
+    "arrival_times",
+    "FabricSim",
+    "DriftConfig",
+    "OnlineReallocator",
+    "shift_profile",
+    "EventCalendar",
+    "ServerPool",
+    "FabricResult",
+    "LatencyStats",
+    "ReallocationEvent",
+    "latency_stats",
+    "steady_throughput",
+    "SharedAllocation",
+    "Tenant",
+    "allocate_shared",
+    "fairness_report",
+    "run_tenants",
+]

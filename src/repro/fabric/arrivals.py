@@ -1,0 +1,65 @@
+"""Request arrival processes for the fabric runtime.
+
+Three shapes cover the serving scenarios we care about:
+
+  * ``ClosedLoop``   — a fixed population of in-flight requests; a completed
+                       request is immediately replaced (throughput mode —
+                       this is the regime the analytic model's steady-state
+                       pipelined throughput describes).
+  * ``PoissonOpen``  — open-loop Poisson arrivals at a target rate,
+                       independent of completions (tail-latency mode).
+  * ``TraceReplay``  — explicit arrival timestamps, e.g. recorded traffic.
+
+Times are in fabric clock cycles throughout; convert at the edges.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = ["ClosedLoop", "PoissonOpen", "TraceReplay", "arrival_times"]
+
+
+@dataclass(frozen=True)
+class ClosedLoop:
+    n_requests: int
+    concurrency: int = 8
+
+
+@dataclass(frozen=True)
+class PoissonOpen:
+    n_requests: int
+    rate_per_cycle: float  # mean arrivals per clock cycle
+    seed: int = 0
+
+    @staticmethod
+    def from_ips(n_requests: int, ips: float, clock_hz: float, seed: int = 0) -> "PoissonOpen":
+        return PoissonOpen(n_requests, ips / clock_hz, seed)
+
+
+@dataclass(frozen=True)
+class TraceReplay:
+    times: np.ndarray  # (N,) nondecreasing arrival times in cycles
+
+
+ArrivalProcess = ClosedLoop | PoissonOpen | TraceReplay
+
+
+def arrival_times(proc: ArrivalProcess) -> np.ndarray | None:
+    """Explicit arrival times for open-loop processes; None for closed-loop
+    (closed-loop admissions depend on completions and are resolved by the
+    engine)."""
+    if isinstance(proc, ClosedLoop):
+        return None
+    if isinstance(proc, PoissonOpen):
+        rng = np.random.default_rng(proc.seed)
+        gaps = rng.exponential(1.0 / proc.rate_per_cycle, size=proc.n_requests)
+        return np.cumsum(gaps)
+    if isinstance(proc, TraceReplay):
+        t = np.asarray(proc.times, dtype=np.float64)
+        if np.any(np.diff(t) < 0):
+            raise ValueError("trace times must be nondecreasing")
+        return t
+    raise TypeError(f"unknown arrival process {proc!r}")

@@ -1,0 +1,200 @@
+"""FabricSim: execute a (NetworkSpec, NetworkProfile, Allocation) triple on
+the discrete-event core.
+
+Mapping onto pools follows the dataflow of the allocation:
+
+  * layer-wise (``layer_dups``): one pool per layer; a server is a full
+    duplicate of the layer's block grid; a job is a patch whose service time
+    is the gather/accumulate barrier ``max_b cycles[p, b]``.
+  * block-wise (``block_dups``): one pool per block; a server is one block
+    replica; a patch becomes one independent job per block.
+
+A request (image) traverses layers in sequence: all of its patch jobs for
+layer ``l`` are enqueued when it enters the stage, and it enters ``l+1``
+when the last of them completes.  Layers occupy disjoint arrays, so
+consecutive requests pipeline across stages exactly as in the paper; the
+steady-state throughput of a saturated closed loop converges to the analytic
+``simulate()`` bottleneck (tests assert agreement within 10%).
+
+Per-patch service times are drawn (with replacement) from the profiled
+per-(patch, block) cycle sample — or, for drift studies, from a second
+"live" profile that the dispatcher samples while the monitor still expects
+the original one.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..core.cim.network import NetworkSpec
+from ..core.cim.profile import NetworkProfile
+from ..core.cim.simulate import Allocation, CLOCK_HZ, _layer_patch_cycles
+from .arrivals import ArrivalProcess, ClosedLoop, arrival_times
+from .events import EventCalendar, ServerPool
+from .metrics import FabricResult
+
+__all__ = ["FabricSim"]
+
+
+@dataclass
+class _Stage:
+    blockwise: bool
+    pools: list[ServerPool]
+    services: np.ndarray  # (S,) barrier times or (S, B) per-block samples
+    ppi: int
+    # layer-wise only: true busy array-cycles per patch (sum over blocks x
+    # block width).  The pool's own accounting charges the barrier max to
+    # every array, which would hide exactly the intra-layer waste the
+    # analytic model's utilization (paper Fig 9) measures.
+    busy_sample: np.ndarray | None = None
+    busy: float = 0.0
+
+
+class FabricSim:
+    def __init__(
+        self,
+        spec: NetworkSpec,
+        prof: NetworkProfile,
+        alloc: Allocation,
+        *,
+        seed: int = 0,
+        live_prof: NetworkProfile | None = None,
+        reallocator=None,
+        clock_hz: float = CLOCK_HZ,
+        record_timeline: bool = False,
+    ):
+        self.spec = spec
+        self.alloc = alloc
+        self.clock_hz = clock_hz
+        self.reallocator = reallocator
+        self.rng = np.random.default_rng(seed)
+        zskip = alloc.policy != "baseline"
+        cyc = _layer_patch_cycles(live_prof or prof, zskip)
+        self.stages: list[_Stage] = []
+        for i, layer in enumerate(spec.layers):
+            if alloc.layer_dups is not None:
+                pools = [
+                    ServerPool(
+                        int(alloc.layer_dups[i]),
+                        width=layer.n_arrays,
+                        record_starts=record_timeline,
+                    )
+                ]
+                services = cyc[i].max(axis=1)  # per-patch barrier
+                busy_sample = cyc[i].sum(axis=1) * layer.arrays_per_block
+                self.stages.append(
+                    _Stage(False, pools, services, layer.patches_per_image, busy_sample)
+                )
+            else:
+                dups = alloc.block_dups[i]
+                pools = [
+                    ServerPool(
+                        int(dups[b]),
+                        width=layer.arrays_per_block,
+                        record_starts=record_timeline,
+                    )
+                    for b in range(layer.n_blocks)
+                ]
+                self.stages.append(_Stage(True, pools, cyc[i], layer.patches_per_image))
+        if reallocator is not None:
+            if alloc.block_dups is None:
+                raise ValueError("online re-allocation requires a block-wise allocation")
+            reallocator.bind(self)
+
+    # ------------------------------------------------------------- internals
+    def _dispatch_stage(self, stage_idx: int, t: float) -> float:
+        st = self.stages[stage_idx]
+        idx = self.rng.integers(0, st.services.shape[0], st.ppi)
+        svc = st.services[idx]
+        if not st.blockwise:
+            st.busy += float(st.busy_sample[idx].sum())
+            return st.pools[0].dispatch(t, svc)
+        done = t
+        for b, pool in enumerate(st.pools):
+            c = pool.dispatch(t, svc[:, b])
+            if c > done:
+                done = c
+        if self.reallocator is not None:
+            self.reallocator.observe(stage_idx, svc.mean(axis=0), t)
+        return done
+
+    def current_block_dups(self) -> np.ndarray:
+        """Flattened replica counts per block (block-wise stages only)."""
+        return np.asarray(
+            [p.n_servers for st in self.stages for p in st.pools if st.blockwise],
+            dtype=np.int64,
+        )
+
+    def apply_growth(self, added: np.ndarray, t_free: float) -> None:
+        """Bring ``added[j]`` extra replicas of flat block ``j`` online at
+        ``t_free``; every pool stalls until then (array reprogramming freezes
+        word lines fabric-wide).  Jobs already enqueued drain on the old
+        configuration — re-programming overlaps with the drain."""
+        k = 0
+        for st in self.stages:
+            for p in st.pools:
+                p.freeze_until(t_free)
+                if st.blockwise:
+                    if added[k]:
+                        p.grow(int(added[k]), t_free)
+                    k += 1
+
+    # ------------------------------------------------------------------ run
+    def run(self, proc: ArrivalProcess) -> FabricResult:
+        L = len(self.stages)
+        cal = EventCalendar()
+        times = arrival_times(proc)
+        n = proc.n_requests if times is None else times.size
+        arrivals = np.zeros(n)
+        completions = np.zeros(n)
+        next_admit = 0
+        if times is None:
+            assert isinstance(proc, ClosedLoop)
+            k = min(proc.concurrency, n)
+            for r in range(k):
+                cal.push(0.0, r, 0)
+            next_admit = k
+        else:
+            for r in range(n):
+                arrivals[r] = times[r]
+                cal.push(times[r], r, 0)
+        while len(cal):
+            t, r, s = cal.pop()
+            if s == L:
+                completions[r] = t
+                if times is None and next_admit < n:
+                    arrivals[next_admit] = t
+                    cal.push(t, next_admit, 0)
+                    next_admit += 1
+                continue
+            done = self._dispatch_stage(s, t)
+            cal.push(done, r, s + 1)
+
+        layer_busy = np.array(
+            [
+                sum(p.busy for p in st.pools) if st.blockwise else st.busy
+                for st in self.stages
+            ]
+        )
+        layer_arrays = np.array(
+            [sum(p.n_servers * p.width for p in st.pools) for st in self.stages],
+            dtype=np.float64,
+        )
+        horizon = float(completions.max()) if completions.size else 0.0
+        layer_capacity = np.array(
+            [sum(p.capacity_cycles(horizon) for p in st.pools) for st in self.stages]
+        )
+        return FabricResult(
+            policy=self.alloc.policy,
+            clock_hz=self.clock_hz,
+            arrivals=arrivals,
+            completions=completions,
+            layer_busy=layer_busy,
+            layer_arrays=layer_arrays,
+            layer_capacity=layer_capacity,
+            reallocations=(
+                list(self.reallocator.events) if self.reallocator is not None else []
+            ),
+        )

@@ -1,0 +1,174 @@
+"""Discrete-event core: FIFO server pools + a global event calendar.
+
+The analytic model in ``core/cim/simulate.py`` collapses time into
+steady-state closed forms; this module keeps it explicit.  The fabric is a
+set of *server pools* — one pool per block (block-wise dataflow) or one pool
+per layer (layer-wise dataflow, where a server is a full layer duplicate and
+a "job" is a patch whose service time is the per-patch barrier
+``max_b cycles[p, b]``).
+
+Two exact optimizations keep pure-Python simulation tractable at ResNet18
+scale (~1.3e5 patch-block jobs per image):
+
+  * Pools are *work-conserving FIFO with no preemption*, so a job's
+    completion time is fixed the moment it is enqueued — later arrivals
+    cannot affect earlier jobs.  We therefore resolve a whole batch of jobs
+    eagerly at dispatch time ("lazy lookahead") instead of scheduling one
+    event per job.  The global calendar only carries request x stage events.
+  * Dispatches happen in nondecreasing simulated time (the calendar pops in
+    time order), so per-pool FIFO order is preserved across requests.
+
+Single-server pools (the common case at small designs) vectorize to a
+cumulative sum; multi-server pools run a heap of server free-times.
+"""
+
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = ["ServerPool", "EventCalendar"]
+
+
+class ServerPool:
+    """``n`` identical replicas of one compute unit with a shared FIFO queue.
+
+    ``width`` = crossbar arrays per replica (for utilization accounting).
+    Server state is just each replica's next-free time; ``busy`` accumulates
+    busy array-cycles.
+    """
+
+    __slots__ = (
+        "avail",
+        "width",
+        "busy",
+        "jobs",
+        "record_starts",
+        "starts",
+        "durations",
+        "_online",
+    )
+
+    def __init__(self, n_servers: int, width: int = 1, record_starts: bool = False):
+        if n_servers < 1:
+            raise ValueError("a pool needs at least one server")
+        self.avail: list[float] = [0.0] * n_servers
+        self.width = int(width)
+        self.busy = 0.0
+        self.jobs = 0
+        self.record_starts = record_starts
+        self.starts: list[np.ndarray] = []
+        self.durations: list[np.ndarray] = []
+        self._online: list[tuple[float, int]] = [(0.0, n_servers)]
+
+    @property
+    def n_servers(self) -> int:
+        return len(self.avail)
+
+    def dispatch(self, t_ready: float, services: np.ndarray) -> float:
+        """FIFO-dispatch a batch of jobs, all ready at ``t_ready``.
+
+        Returns the completion time of the batch (max over jobs) and
+        advances the replica free-times.  Exact: equivalent to running one
+        event per job.
+        """
+        s = np.asarray(services, dtype=np.float64)
+        m = s.size
+        if m == 0:
+            return t_ready
+        self.busy += float(s.sum()) * self.width
+        self.jobs += m
+        if len(self.avail) == 1:
+            start0 = self.avail[0] if self.avail[0] > t_ready else t_ready
+            ends = start0 + np.cumsum(s)
+            if self.record_starts:
+                self.starts.append(ends - s)
+                self.durations.append(s)
+            self.avail[0] = float(ends[-1])
+            return self.avail[0]
+        heap = self.avail
+        heapq.heapify(heap)
+        push, pop = heapq.heappush, heapq.heappop
+        last = 0.0
+        if self.record_starts:
+            st = np.empty(m)
+            for j, sv in enumerate(s.tolist()):
+                a = pop(heap)
+                if a < t_ready:
+                    a = t_ready
+                st[j] = a
+                e = a + sv
+                if e > last:
+                    last = e
+                push(heap, e)
+            self.starts.append(st)
+            self.durations.append(s)
+        else:
+            for sv in s.tolist():
+                a = pop(heap)
+                if a < t_ready:
+                    a = t_ready
+                e = a + sv
+                if e > last:
+                    last = e
+                push(heap, e)
+        return last
+
+    def grow(self, extra: int, t_free: float) -> None:
+        """Add ``extra`` replicas that come online at ``t_free``."""
+        self.avail.extend([float(t_free)] * int(extra))
+        self._online.append((float(t_free), int(extra)))
+
+    def capacity_cycles(self, horizon: float) -> float:
+        """Array-cycles of capacity over [0, horizon], counting replicas
+        added mid-run only from the moment they came online."""
+        return self.width * sum(
+            n * max(0.0, horizon - t) for t, n in self._online
+        )
+
+    def freeze_until(self, t: float) -> None:
+        """Stall the pool (e.g. while arrays are being reprogrammed)."""
+        self.avail = [a if a > t else float(t) for a in self.avail]
+
+    def timeline(self, bucket: float, horizon: float) -> np.ndarray:
+        """Busy array-cycles per time bucket (requires record_starts)."""
+        n = int(np.ceil(horizon / bucket)) + 1
+        out = np.zeros(n)
+        if not self.starts:
+            return out
+        st = np.concatenate(self.starts)
+        du = np.concatenate(self.durations)
+        idx = np.minimum((st / bucket).astype(np.int64), n - 1)
+        np.add.at(out, idx, du * self.width)
+        return out
+
+
+@dataclass(order=True)
+class _Event:
+    time: float
+    seq: int
+    req: int = field(compare=False)
+    stage: int = field(compare=False)
+
+
+class EventCalendar:
+    """Time-ordered heap of (request, stage) entry events."""
+
+    __slots__ = ("_heap", "_seq")
+
+    def __init__(self):
+        self._heap: list[_Event] = []
+        self._seq = 0
+
+    def push(self, time: float, req: int, stage: int) -> None:
+        heapq.heappush(self._heap, _Event(float(time), self._seq, req, stage))
+        self._seq += 1
+
+    def pop(self) -> tuple[float, int, int]:
+        ev = heapq.heappop(self._heap)
+        return ev.time, ev.req, ev.stage
+
+    def __len__(self) -> int:
+        return len(self._heap)

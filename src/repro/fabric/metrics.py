@@ -1,0 +1,108 @@
+"""Result containers + latency/throughput/utilization accounting."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = ["LatencyStats", "ReallocationEvent", "FabricResult", "latency_stats", "steady_throughput"]
+
+
+@dataclass(frozen=True)
+class LatencyStats:
+    n: int
+    mean: float
+    p50: float
+    p95: float
+    p99: float
+    max: float
+
+    def scaled(self, k: float) -> "LatencyStats":
+        return LatencyStats(self.n, self.mean * k, self.p50 * k, self.p95 * k, self.p99 * k, self.max * k)
+
+
+def latency_stats(latencies: np.ndarray) -> LatencyStats:
+    lat = np.asarray(latencies, dtype=np.float64)
+    if lat.size == 0:
+        return LatencyStats(0, 0.0, 0.0, 0.0, 0.0, 0.0)
+    p50, p95, p99 = np.percentile(lat, [50, 95, 99])
+    return LatencyStats(int(lat.size), float(lat.mean()), float(p50), float(p95), float(p99), float(lat.max()))
+
+
+def steady_throughput(
+    completions: np.ndarray, warmup_frac: float = 0.25, clock_hz: float | None = None
+) -> float:
+    """Steady-state rate from completion timestamps, discarding the pipeline
+    fill: rate over the completions after the ``warmup_frac`` quantile.
+    Returns requests/cycle, or requests/sec when ``clock_hz`` is given."""
+    c = np.sort(np.asarray(completions, dtype=np.float64))
+    if c.size < 2:
+        return 0.0
+    w = min(int(c.size * warmup_frac), c.size - 2)
+    span = c[-1] - c[w]
+    if span <= 0:
+        return 0.0
+    rate = (c.size - 1 - w) / span
+    return rate * clock_hz if clock_hz else rate
+
+
+@dataclass(frozen=True)
+class ReallocationEvent:
+    time: float  # cycles, when drift tripped
+    stall_cycles: float  # fabric frozen for this long (array reprogramming)
+    arrays_added: int
+    divergence: float  # monitor statistic that tripped the threshold
+
+
+@dataclass
+class FabricResult:
+    """One fabric run: per-request timings + per-pool utilization."""
+
+    policy: str
+    clock_hz: float
+    arrivals: np.ndarray  # (N,) cycles
+    completions: np.ndarray  # (N,) cycles
+    layer_busy: np.ndarray  # (L,) busy array-cycles
+    layer_arrays: np.ndarray  # (L,) arrays alive at the end (servers x width)
+    # (L,) array-cycles of capacity over the run; differs from
+    # layer_arrays * makespan when replicas came online mid-run (drift growth)
+    layer_capacity: np.ndarray | None = None
+    reallocations: list[ReallocationEvent] = field(default_factory=list)
+    tenant: str | None = None
+
+    @property
+    def latencies(self) -> np.ndarray:
+        return self.completions - self.arrivals
+
+    @property
+    def makespan(self) -> float:
+        return float(self.completions.max()) if self.completions.size else 0.0
+
+    @property
+    def latency(self) -> LatencyStats:
+        return latency_stats(self.latencies)
+
+    def latency_ms(self) -> LatencyStats:
+        return self.latency.scaled(1e3 / self.clock_hz)
+
+    @property
+    def images_per_sec(self) -> float:
+        return steady_throughput(self.completions, clock_hz=self.clock_hz)
+
+    @property
+    def layer_utilization(self) -> np.ndarray:
+        span = self.makespan
+        if span <= 0:
+            return np.zeros_like(self.layer_busy)
+        cap = (
+            self.layer_capacity
+            if self.layer_capacity is not None
+            else self.layer_arrays * span
+        )
+        return self.layer_busy / cap
+
+    @property
+    def mean_utilization(self) -> float:
+        u = self.layer_utilization
+        return float(u.mean()) if u.size else 0.0

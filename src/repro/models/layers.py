@@ -193,8 +193,9 @@ def _decode_attn_seq_sharded(
     with a pmax + two psums.  Replaces the all-gather of the full cache
     (which dominated big-batch decode memory) with O(b*h*hd) collectives.
     """
-    from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from ..distrib.compat import shard_map
 
     dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
     b = q.shape[0]
@@ -232,7 +233,7 @@ def _decode_attn_seq_sharded(
             P(),
         ),
         out_specs=P(bspec, None, None, None),
-        check_rep=False,
+        check_vma=False,
     )
     return fn(q, k, v, kv_len)
 
@@ -579,8 +580,9 @@ def moe_fwd(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
         y = _combine(expert_out, state, d) + shared_out(xt)
         return y.reshape(b, s, d)
 
-    from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from ..distrib.compat import shard_map
 
     from ..distrib.sharding import moe_ep_axes
 
@@ -631,7 +633,7 @@ def moe_fwd(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
             mesh=mesh,
             in_specs=in_specs,
             out_specs=P(bspec, "model" if seq_split > 1 else None, None),
-            check_rep=False,
+            check_vma=False,
         )
         return fn(x, p["router"], p["experts"], p.get("shared", {}))
 
@@ -672,6 +674,6 @@ def moe_fwd(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
         mesh=mesh,
         in_specs=(x_spec, P(None, None), expert_specs, shared_specs),
         out_specs=x_spec,
-        check_rep=False,
+        check_vma=False,
     )
     return fn(x, p["router"], p["experts"], p.get("shared", {}))

@@ -80,7 +80,9 @@ def make_compressed_train_step(cfg: ModelConfig, opt: AdamWConfig, mesh):
         metrics["loss"] = jax.lax.pmean(loss, "pod")
         return params, opt_state, new_ef, metrics
 
-    return jax.shard_map(
+    from ..distrib.compat import shard_map
+
+    return shard_map(
         local_step,
         mesh=mesh,
         in_specs=(P(), P(), P(), P("pod")),

@@ -3,6 +3,7 @@ algorithms at the distributed-runtime level)."""
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep: pip install .[dev]
 from hypothesis import given, settings, strategies as st
 
 from repro.core.alloc.expert import (

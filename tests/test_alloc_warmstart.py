@@ -1,0 +1,126 @@
+"""greedy_allocate warm-start (initial_replicas=) invariants +
+proportional_allocate edge cases — the online re-allocation path.
+
+No hypothesis dependency: these must run in the minimal environment."""
+
+import numpy as np
+import pytest
+
+from repro.core.alloc.greedy import greedy_allocate, proportional_allocate
+
+
+def _units(seed=0, n=24):
+    rng = np.random.default_rng(seed)
+    lat = rng.exponential(100.0, size=n) + 1.0
+    cost = rng.integers(1, 9, size=n).astype(np.float64)
+    return lat, cost
+
+
+# ------------------------------------------------------------- warm start
+def test_warm_start_never_decreases_replicas():
+    lat, cost = _units()
+    init = np.ones(lat.size, dtype=np.int64)
+    init[::3] = 4
+    res = greedy_allocate(lat, cost, budget=60.0, initial_replicas=init)
+    assert np.all(res.replicas >= init)
+    assert res.spent <= 60.0 + 1e-9
+    assert res.spent + res.leftover == pytest.approx(60.0)
+
+
+def test_warm_start_equals_cold_start_from_ones():
+    lat, cost = _units(1)
+    cold = greedy_allocate(lat, cost, budget=100.0)
+    warm = greedy_allocate(
+        lat, cost, budget=100.0, initial_replicas=np.ones(lat.size, dtype=np.int64)
+    )
+    np.testing.assert_array_equal(cold.replicas, warm.replicas)
+
+
+def test_warm_start_same_stopping_rule():
+    """The loop must stop exactly when the *current slowest* unit cannot be
+    afforded — not skip to a cheaper faster unit."""
+    lat, cost = _units(2)
+    init = 1 + (np.arange(lat.size) % 3).astype(np.int64)
+    res = greedy_allocate(lat, cost, budget=35.0, initial_replicas=init)
+    slowest = int(np.argmax(res.latency))
+    assert cost[slowest] > res.leftover
+
+
+def test_warm_start_zero_budget_is_identity():
+    lat, cost = _units(3)
+    init = np.full(lat.size, 2, dtype=np.int64)
+    res = greedy_allocate(lat, cost, budget=0.0, initial_replicas=init)
+    np.testing.assert_array_equal(res.replicas, init)
+    assert res.spent == 0.0
+    np.testing.assert_allclose(res.latency, lat / init)
+
+
+def test_warm_start_reduces_makespan_when_affordable():
+    lat, cost = _units(4)
+    init = np.ones(lat.size, dtype=np.int64)
+    before = (lat / init).max()
+    res = greedy_allocate(lat, cost, budget=200.0, initial_replicas=init)
+    assert res.makespan < before
+
+
+def test_warm_start_rejects_invalid_initials():
+    lat, cost = _units(5)
+    bad = np.ones(lat.size, dtype=np.int64)
+    bad[0] = 0
+    with pytest.raises(ValueError, match="at least one replica"):
+        greedy_allocate(lat, cost, budget=10.0, initial_replicas=bad)
+
+
+def test_incremental_warm_start_tracks_cold_total():
+    """Spending a budget in two warm-started installments can't beat the
+    greedy one-shot makespan, and lands within one replica-step of it."""
+    lat, cost = _units(6)
+    one_shot = greedy_allocate(lat, cost, budget=120.0)
+    first = greedy_allocate(lat, cost, budget=60.0)
+    second = greedy_allocate(
+        lat, cost, budget=60.0 + first.leftover, initial_replicas=first.replicas
+    )
+    assert second.makespan >= one_shot.makespan - 1e-9
+    assert np.all(second.replicas >= first.replicas)
+
+
+# ------------------------------------------------------- proportional edges
+def test_proportional_zero_budget():
+    w = np.array([5.0, 1.0, 3.0])
+    c = np.array([2.0, 2.0, 2.0])
+    res = proportional_allocate(w, c, budget=0.0)
+    np.testing.assert_array_equal(res.replicas, [1, 1, 1])
+    assert res.spent == 0.0 and res.leftover == 0.0
+
+
+def test_proportional_negative_budget_clamps_to_ones():
+    w = np.array([5.0, 1.0])
+    res = proportional_allocate(w, np.array([1.0, 1.0]), budget=-7.0)
+    np.testing.assert_array_equal(res.replicas, [1, 1])
+
+
+def test_proportional_single_unit():
+    res = proportional_allocate(np.array([10.0]), np.array([3.0]), budget=10.0)
+    # floor(10/3) = 3 extra, remainder 1 < 3 -> no top-up
+    np.testing.assert_array_equal(res.replicas, [4])
+    assert res.spent == pytest.approx(9.0)
+    assert res.leftover == pytest.approx(1.0)
+
+
+def test_proportional_empty():
+    res = proportional_allocate(np.array([]), np.array([]), budget=5.0)
+    assert res.replicas.size == 0
+    assert res.makespan == 0.0
+
+
+def test_proportional_never_overspends():
+    rng = np.random.default_rng(7)
+    for _ in range(20):
+        n = rng.integers(1, 12)
+        w = rng.exponential(1.0, n) + 1e-3
+        c = rng.integers(1, 6, n).astype(np.float64)
+        b = float(rng.integers(0, 40))
+        res = proportional_allocate(w, c, b)
+        assert res.spent <= b + 1e-9
+        assert np.all(res.replicas >= 1)
+        assert res.spent + res.leftover == pytest.approx(b)

@@ -1,0 +1,126 @@
+"""Unit tests for the discrete-event core: pool scheduling must be exactly
+FIFO-c-server, arrivals must have the advertised statistics."""
+
+import heapq
+
+import numpy as np
+import pytest
+
+from repro.fabric import (
+    ClosedLoop,
+    EventCalendar,
+    PoissonOpen,
+    ServerPool,
+    TraceReplay,
+    arrival_times,
+    latency_stats,
+    steady_throughput,
+)
+
+
+def _brute_force_fifo(n_servers, batches):
+    """One-event-per-job reference: (t_ready, services) batches in time order."""
+    avail = [0.0] * n_servers
+    ends = []
+    for t, services in batches:
+        for s in services:
+            heapq.heapify(avail)
+            a = max(heapq.heappop(avail), t)
+            heapq.heappush(avail, a + s)
+            ends.append(a + s)
+    return ends
+
+
+@pytest.mark.parametrize("n_servers", [1, 2, 3, 7])
+def test_pool_matches_brute_force(n_servers):
+    rng = np.random.default_rng(0)
+    pool = ServerPool(n_servers)
+    batches = []
+    t = 0.0
+    for _ in range(20):
+        t += rng.exponential(5.0)
+        s = rng.exponential(3.0, size=rng.integers(1, 12))
+        batches.append((t, s))
+    got = [pool.dispatch(t, s) for t, s in batches]
+    ref_ends = _brute_force_fifo(n_servers, batches)
+    # batch completion = max end among the batch's jobs
+    k, ref = 0, []
+    for _, s in batches:
+        ref.append(max(ref_ends[k : k + len(s)]))
+        k += len(s)
+    np.testing.assert_allclose(got, ref, rtol=1e-12)
+    assert pool.jobs == sum(len(s) for _, s in batches)
+    assert pool.busy == pytest.approx(sum(s.sum() for _, s in batches))
+
+
+def test_pool_more_servers_never_slower():
+    rng = np.random.default_rng(1)
+    s = rng.exponential(2.0, size=200)
+    ends = []
+    for d in (1, 2, 4, 8):
+        pool = ServerPool(d)
+        ends.append(pool.dispatch(0.0, s))
+    assert all(a >= b - 1e-9 for a, b in zip(ends, ends[1:]))
+    # lower bounds: work conservation and the longest job
+    assert ends[-1] >= s.sum() / 8 - 1e-9
+    assert ends[-1] >= s.max() - 1e-9
+
+
+def test_pool_grow_and_freeze():
+    pool = ServerPool(1)
+    end = pool.dispatch(0.0, np.array([10.0, 10.0]))
+    assert end == pytest.approx(20.0)
+    pool.freeze_until(100.0)
+    assert pool.dispatch(0.0, np.array([1.0])) == pytest.approx(101.0)
+    pool.grow(1, t_free=200.0)
+    # old server free at 101: job1 runs 150->155 there; job2 FIFO-picks the
+    # earliest-free server, which is the old one again (155) not the new (200)
+    end = pool.dispatch(150.0, np.array([5.0, 5.0]))
+    assert end == pytest.approx(160.0)
+    assert pool.n_servers == 2
+    # a long batch spills onto the new server once it is online:
+    # old(160): 160->210, new(200): 200->250, old again: 210->260
+    end = pool.dispatch(160.0, np.array([50.0, 50.0, 50.0]))
+    assert end == pytest.approx(260.0)
+
+
+def test_pool_timeline_accounts_all_busy_cycles():
+    rng = np.random.default_rng(2)
+    pool = ServerPool(3, width=4, record_starts=True)
+    s = rng.exponential(2.0, size=50)
+    end = pool.dispatch(0.0, s)
+    tl = pool.timeline(bucket=1.0, horizon=end)
+    assert tl.sum() == pytest.approx(s.sum() * 4)
+
+
+def test_event_calendar_orders_ties_by_insertion():
+    cal = EventCalendar()
+    cal.push(5.0, 1, 0)
+    cal.push(1.0, 2, 0)
+    cal.push(5.0, 3, 0)
+    assert [cal.pop()[1] for _ in range(3)] == [2, 1, 3]
+    assert len(cal) == 0
+
+
+def test_poisson_rate_and_trace_validation():
+    proc = PoissonOpen(n_requests=4000, rate_per_cycle=1 / 50.0, seed=0)
+    t = arrival_times(proc)
+    assert t.size == 4000
+    mean_gap = t[-1] / t.size
+    assert mean_gap == pytest.approx(50.0, rel=0.1)
+    assert arrival_times(ClosedLoop(10, 2)) is None
+    with pytest.raises(ValueError):
+        arrival_times(TraceReplay(np.array([3.0, 1.0])))
+
+
+def test_latency_stats_and_steady_throughput():
+    lat = np.arange(1, 101, dtype=np.float64)
+    st = latency_stats(lat)
+    assert st.n == 100 and st.max == 100.0
+    assert st.p50 == pytest.approx(50.5)
+    assert st.p99 >= st.p95 >= st.p50
+    # constant completion rate: 1 per 10 cycles regardless of warmup trim
+    comp = np.arange(0, 1000, 10.0)
+    assert steady_throughput(comp) == pytest.approx(0.1)
+    assert steady_throughput(comp, clock_hz=100.0) == pytest.approx(10.0)
+    assert steady_throughput(np.array([5.0])) == 0.0

@@ -1,0 +1,31 @@
+"""Acceptance: event-driven closed-loop throughput agrees with the analytic
+``simulate()`` within 10% for all five policies on ResNet18.
+
+A 20-stage pipeline needs ~2x that many in-flight requests before the
+bottleneck saturates (blockwise equalizes per-stage times, so the
+sum/max ratio approaches the layer count); the closed loop below holds 40.
+"""
+
+import pytest
+
+from repro.core.cim import allocate, profile_network, resnet18_imagenet, simulate
+from repro.fabric import ClosedLoop, FabricSim
+
+POLICIES = ("baseline", "weight_based", "perf_layerwise", "weight_blockflow", "blockwise")
+
+
+@pytest.fixture(scope="module")
+def resnet():
+    spec = resnet18_imagenet()
+    return spec, profile_network(spec, n_images=1, sample_patches=64)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_closed_loop_matches_analytic_resnet18(resnet, policy):
+    spec, prof = resnet
+    alloc = allocate(spec, prof, policy, spec.min_pes() * 2)
+    ana = simulate(spec, prof, alloc, n_images=64)
+    res = FabricSim(spec, prof, alloc, seed=1).run(
+        ClosedLoop(n_requests=120, concurrency=40)
+    )
+    assert res.images_per_sec == pytest.approx(ana.images_per_sec, rel=0.10)

@@ -1,0 +1,150 @@
+"""FabricSim vs the analytic model on VGG11 + tail-latency and drift
+scenarios (VGG11 keeps the event counts small; the ResNet18 acceptance runs
+live in test_fabric_resnet18.py)."""
+
+import numpy as np
+import pytest
+
+from repro.core.cim import allocate, profile_network, simulate, vgg11_cifar10
+from repro.core.cim.simulate import ARRAYS_PER_PE, CLOCK_HZ, Policy
+from repro.fabric import (
+    ClosedLoop,
+    DriftConfig,
+    FabricSim,
+    OnlineReallocator,
+    PoissonOpen,
+    TraceReplay,
+    shift_profile,
+)
+
+POLICIES = ("baseline", "weight_based", "perf_layerwise", "weight_blockflow", "blockwise")
+
+
+@pytest.fixture(scope="module")
+def vgg():
+    spec = vgg11_cifar10()
+    return spec, profile_network(spec, n_images=1, sample_patches=128)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_closed_loop_matches_analytic(vgg, policy):
+    spec, prof = vgg
+    alloc = allocate(spec, prof, policy, spec.min_pes() * 2)
+    ana = simulate(spec, prof, alloc, n_images=64)
+    res = FabricSim(spec, prof, alloc, seed=1).run(ClosedLoop(n_requests=40, concurrency=16))
+    assert res.images_per_sec == pytest.approx(ana.images_per_sec, rel=0.10)
+
+
+def test_utilization_and_latency_sane(vgg):
+    spec, prof = vgg
+    alloc = allocate(spec, prof, "blockwise", spec.min_pes() * 2)
+    res = FabricSim(spec, prof, alloc, seed=1).run(ClosedLoop(n_requests=40, concurrency=16))
+    u = res.layer_utilization
+    assert u.shape == (len(spec.layers),)
+    assert np.all(u > 0) and np.all(u <= 1.0 + 1e-9)
+    lat = res.latencies
+    assert np.all(lat > 0)
+    # closed loop: completions cover all requests, in finite time
+    assert res.completions.size == 40 and np.all(res.completions > 0)
+
+
+def test_blockwise_beats_weight_based_p99(vgg):
+    """Acceptance: same open-loop Poisson load, strictly better tail."""
+    spec, prof = vgg
+    pes = spec.min_pes() * 2
+    wb = allocate(spec, prof, "weight_based", pes)
+    bw = allocate(spec, prof, "blockwise", pes)
+    cap_wb = simulate(spec, prof, wb, n_images=64).images_per_sec
+    proc = PoissonOpen(n_requests=300, rate_per_cycle=0.7 * cap_wb / CLOCK_HZ, seed=5)
+    r_wb = FabricSim(spec, prof, wb, seed=3).run(proc)
+    r_bw = FabricSim(spec, prof, bw, seed=3).run(proc)
+    assert r_bw.latency.p99 < r_wb.latency.p99
+    assert r_bw.latency.p50 < r_wb.latency.p50
+
+
+def test_open_loop_overload_queues_grow(vgg):
+    """Above capacity the backlog (and so latency) must keep climbing —
+    an open-loop property the analytic model cannot express."""
+    spec, prof = vgg
+    alloc = allocate(spec, prof, "blockwise", spec.min_pes())
+    cap = simulate(spec, prof, alloc, n_images=64).images_per_sec
+    proc = PoissonOpen(n_requests=120, rate_per_cycle=1.5 * cap / CLOCK_HZ, seed=7)
+    res = FabricSim(spec, prof, alloc, seed=4).run(proc)
+    lat = res.latencies
+    first, last = lat[:30].mean(), lat[-30:].mean()
+    assert last > 3 * first
+
+
+def test_trace_replay_bursts_hurt_tail(vgg):
+    """Same mean rate, bursty vs evenly spaced: bursts must show up in p99."""
+    spec, prof = vgg
+    alloc = allocate(spec, prof, "blockwise", spec.min_pes() * 2)
+    cap = simulate(spec, prof, alloc, n_images=64).images_per_sec
+    gap = CLOCK_HZ / (0.6 * cap)
+    n = 128
+    even = np.arange(1, n + 1) * gap
+    # same span, arrivals packed in bursts of 16
+    bursts = (np.repeat(np.arange(1, n // 16 + 1) * 16 * gap, 16)
+              + np.tile(np.arange(16.0), n // 16))
+    r_even = FabricSim(spec, prof, alloc, seed=6).run(TraceReplay(even))
+    r_burst = FabricSim(spec, prof, alloc, seed=6).run(TraceReplay(bursts))
+    assert r_burst.latency.p99 > r_even.latency.p99
+
+
+def test_drift_reallocation_recovers_throughput(vgg):
+    """Acceptance: after a distribution shift the online re-allocator must
+    recover >= half of the throughput a clairvoyant re-allocation gets back."""
+    spec, prof = vgg
+    pes = spec.min_pes() * 2
+    free = pes * ARRAYS_PER_PE - spec.n_arrays
+    reserve = 0.4
+    alloc0 = allocate(spec, prof, "blockwise", pes, free_budget=free * (1 - reserve))
+    shifted = shift_profile(prof, {4: 1.8, 5: 1.8, 6: 1.8})
+    cl = ClosedLoop(n_requests=120, concurrency=24)
+
+    stale = FabricSim(spec, prof, alloc0, seed=2, live_prof=shifted).run(cl)
+    rl = OnlineReallocator(spec, prof, reserve_arrays=free * reserve, cfg=DriftConfig())
+    online = FabricSim(spec, prof, alloc0, seed=2, live_prof=shifted, reallocator=rl).run(cl)
+    oracle_alloc = allocate(spec, shifted, "blockwise", pes)
+    oracle = FabricSim(spec, shifted, oracle_alloc, seed=2).run(cl)
+
+    ts, to, torc = stale.images_per_sec, online.images_per_sec, oracle.images_per_sec
+    assert torc > ts  # the shift really hurt the stale allocation
+    recovery = (to - ts) / (torc - ts)
+    assert recovery >= 0.5, f"recovered only {recovery:.2f} of lost throughput"
+    # the re-allocation is visible, charged, and paid from the reserve
+    assert len(online.reallocations) >= 1
+    ev = online.reallocations[0]
+    assert ev.arrays_added > 0 and ev.stall_cycles > 0 and ev.divergence > 0
+    assert rl.budget >= 0
+
+
+def test_drift_monitor_quiet_without_drift(vgg):
+    """No shift -> no reallocation (EWMA stays inside the threshold)."""
+    spec, prof = vgg
+    pes = spec.min_pes() * 2
+    free = pes * ARRAYS_PER_PE - spec.n_arrays
+    alloc0 = allocate(spec, prof, "blockwise", pes, free_budget=free * 0.6)
+    rl = OnlineReallocator(spec, prof, reserve_arrays=free * 0.4, cfg=DriftConfig())
+    res = FabricSim(spec, prof, alloc0, seed=2, reallocator=rl).run(
+        ClosedLoop(n_requests=60, concurrency=16)
+    )
+    assert res.reallocations == []
+    assert rl.divergence < DriftConfig().threshold
+
+
+def test_growth_never_shrinks_replicas(vgg):
+    spec, prof = vgg
+    pes = spec.min_pes() * 2
+    free = pes * ARRAYS_PER_PE - spec.n_arrays
+    alloc0 = allocate(spec, prof, "blockwise", pes, free_budget=free * 0.6)
+    before = np.concatenate(alloc0.block_dups)
+    rl = OnlineReallocator(spec, prof, reserve_arrays=free * 0.4, cfg=DriftConfig())
+    sim = FabricSim(
+        spec, prof, alloc0, seed=2,
+        live_prof=shift_profile(prof, {4: 1.8, 5: 1.8, 6: 1.8}),
+        reallocator=rl,
+    )
+    sim.run(ClosedLoop(n_requests=80, concurrency=16))
+    after = sim.current_block_dups()
+    assert np.all(after >= before)

@@ -1,0 +1,93 @@
+"""Multi-tenant allocation: weighted-fair greedy across networks sharing one
+array budget, with per-tenant accounting."""
+
+import numpy as np
+import pytest
+
+from repro.core.cim import profile_network, resnet18_imagenet, vgg11_cifar10
+from repro.fabric import ClosedLoop, Tenant, allocate_shared, fairness_report, run_tenants
+
+
+@pytest.fixture(scope="module")
+def vgg():
+    spec = vgg11_cifar10()
+    return spec, profile_network(spec, n_images=1, sample_patches=128)
+
+
+def _pes_for(*specs, mult=2):
+    base = sum(s.n_arrays for s in specs)
+    return -(-base // 64) * mult
+
+
+def test_weighted_tenant_gets_more(vgg):
+    """Identical networks, 3:1 weights -> the heavy tenant must get more
+    arrays, more throughput, and a better tail."""
+    spec, prof = vgg
+    tenants = [
+        Tenant("heavy", spec, prof, weight=3.0),
+        Tenant("light", spec, prof, weight=1.0),
+    ]
+    shared = allocate_shared(tenants, n_pes=_pes_for(spec, spec, mult=2))
+    a_heavy, a_light = shared.allocations
+    assert a_heavy.arrays_used > a_light.arrays_used
+    assert all(np.all(d >= 1) for d in a_heavy.block_dups + a_light.block_dups)
+    assert shared.arrays_used <= shared.arrays_total
+
+    results = run_tenants(
+        shared, [ClosedLoop(40, 12), ClosedLoop(40, 12)], seed=0
+    )
+    heavy, light = results
+    assert heavy.tenant == "heavy" and light.tenant == "light"
+    assert heavy.images_per_sec > light.images_per_sec
+    assert heavy.latency.p95 < light.latency.p95
+
+    rep = fairness_report(shared, results)
+    assert set(rep["tenants"]) == {"heavy", "light"}
+    assert 0 < rep["weighted_rate_balance"] <= 1.0
+    # identical specs: weighted rates should be roughly proportional
+    assert rep["weighted_rate_balance"] > 0.5
+
+
+def test_mixed_networks_fit_and_serve(vgg):
+    """ResNet18 + VGG11 share a fabric (allocation-level check: the event
+    run at ResNet18 scale lives in benchmarks)."""
+    vspec, vprof = vgg
+    rspec = resnet18_imagenet()
+    # a flat synthetic profile is enough for allocation geometry checks —
+    # the shared allocator only reads per-block mean cycles
+    from repro.core.cim.profile import LayerProfile, NetworkProfile
+
+    layers = []
+    for l in rspec.layers:
+        base = np.full(l.n_blocks, 512.0)
+        layers.append(
+            LayerProfile(
+                name=l.name,
+                block_density=np.full(l.n_blocks, 0.5),
+                mean_cycles=base,
+                cycles_sample=np.broadcast_to(base, (8, l.n_blocks)).copy(),
+                baseline_block_cycles=np.full(l.n_blocks, 1024, dtype=np.int64),
+                patches_per_image=l.patches_per_image,
+            )
+        )
+    rprof = NetworkProfile("resnet18", tuple(layers))
+
+    tenants = [Tenant("resnet", rspec, rprof), Tenant("vgg", vspec, vprof)]
+    shared = allocate_shared(tenants, n_pes=_pes_for(rspec, vspec, mult=2))
+    assert shared.arrays_used <= shared.arrays_total
+    assert shared.leftover >= 0
+    r_alloc, v_alloc = shared.allocations
+    assert sum(d.size for d in r_alloc.block_dups) == rspec.n_blocks
+    assert sum(d.size for d in v_alloc.block_dups) == vspec.n_blocks
+    # both tenants got replicas beyond the mandatory copy
+    assert r_alloc.arrays_used > rspec.n_arrays
+    assert v_alloc.arrays_used > vspec.n_arrays
+
+
+def test_budget_too_small_raises(vgg):
+    spec, prof = vgg
+    tenants = [Tenant("a", spec, prof), Tenant("b", spec, prof)]
+    with pytest.raises(ValueError, match="mandatory"):
+        allocate_shared(tenants, n_pes=spec.min_pes())  # fits one, not two
+    with pytest.raises(ValueError, match="positive"):
+        allocate_shared([Tenant("a", spec, prof, weight=0.0)], n_pes=spec.min_pes() * 2)

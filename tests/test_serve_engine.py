@@ -8,7 +8,12 @@ import pytest
 from repro.configs import get_config
 from repro.distrib.context import set_mesh
 from repro.models import forward, init_cache, init_params
-from repro.serve.engine import init_slot_state, reset_slots, slot_decode_step
+from repro.serve.engine import (
+    init_slot_state,
+    prefill_slot,
+    reset_slots,
+    slot_decode_step,
+)
 from repro.serve.scheduler import (
     WorkloadConfig,
     sample_lengths,
@@ -99,6 +104,69 @@ def test_stale_cache_masked_after_reset(setup):
         outs_fresh.append(lg)
     np.testing.assert_allclose(
         np.asarray(jnp.stack(outs)), np.asarray(jnp.stack(outs_fresh)), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_prefill_preserves_untouched_slot_lens(setup):
+    """reset_slots + prefill_slot must leave unmasked slots' lens alone."""
+    cfg, params = setup
+    key = jax.random.PRNGKey(4)
+    toks = jax.random.randint(key, (2, 3), 0, cfg.vocab)
+    prompt = jax.random.randint(jax.random.fold_in(key, 1), (2, 4), 0, cfg.vocab)
+
+    state = init_slot_state(cfg, 2, max_seq=16, dtype=jnp.float32)
+    for t in range(3):
+        _, state = slot_decode_step(params, cfg, state, toks[:, t])
+    state = reset_slots(state, jnp.array([False, True]))
+    logits, state = prefill_slot(params, cfg, state, prompt, jnp.array([False, True]))
+    assert logits.shape[0] == 2
+    # slot 0 untouched: len still 3; slot 1 refilled: len == prompt length
+    assert int(state["lens"][0]) == 3
+    assert int(state["lens"][1]) == 4
+
+
+def test_masked_attention_ignores_stale_rows_after_prefill(setup):
+    """After a masked prefill clobbers cache rows beyond a kept slot's len,
+    the kept slot's next decode must still match a solo run — the per-sample
+    valid mask (and the scatter at lens[b]) hide every stale row."""
+    cfg, params = setup
+    key = jax.random.PRNGKey(5)
+    toks = jax.random.randint(key, (2, 4), 0, cfg.vocab)
+    prompt = jax.random.randint(jax.random.fold_in(key, 1), (2, 5), 0, cfg.vocab)
+    nxt = jax.random.randint(jax.random.fold_in(key, 2), (2,), 0, cfg.vocab)
+
+    state = init_slot_state(cfg, 2, max_seq=16, dtype=jnp.float32)
+    for t in range(4):
+        _, state = slot_decode_step(params, cfg, state, toks[:, t])
+    state = reset_slots(state, jnp.array([False, True]))
+    # prefill writes at slot 0's positions 4..8 too (demo-engine tradeoff) —
+    # those rows are stale for slot 0, whose len snaps back to 4
+    _, state = prefill_slot(params, cfg, state, prompt, jnp.array([False, True]))
+    lg, _ = slot_decode_step(params, cfg, state, nxt)
+
+    solo = init_slot_state(cfg, 1, max_seq=16, dtype=jnp.float32)
+    for t in range(4):
+        _, solo = slot_decode_step(params, cfg, solo, toks[:1, t])
+    lg_solo, _ = slot_decode_step(params, cfg, solo, nxt[:1])
+    np.testing.assert_allclose(
+        np.asarray(lg[0]), np.asarray(lg_solo[0]), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_prefill_logits_match_stepwise_decode(setup):
+    """prefill_slot is just repeated slot_decode_step: last logits agree."""
+    cfg, params = setup
+    key = jax.random.PRNGKey(6)
+    prompt = jax.random.randint(key, (1, 5), 0, cfg.vocab)
+
+    state = init_slot_state(cfg, 1, max_seq=16, dtype=jnp.float32)
+    lg_pref, _ = prefill_slot(params, cfg, state, prompt, jnp.array([True]))
+
+    state2 = init_slot_state(cfg, 1, max_seq=16, dtype=jnp.float32)
+    for t in range(5):
+        lg_step, state2 = slot_decode_step(params, cfg, state2, prompt[:, t])
+    np.testing.assert_allclose(
+        np.asarray(lg_pref), np.asarray(lg_step), rtol=2e-3, atol=2e-3
     )
 
 
