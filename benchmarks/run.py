@@ -384,6 +384,56 @@ def fabric_multitenant():
         )
 
 
+# ------------------------------------------------------------------- dse
+def dse():
+    """Vectorized design-space sweep vs the scalar loop: >=1000 (policy,
+    PE-count, array-geometry) configs, element-wise equivalence + speedup."""
+    import numpy as np
+
+    from repro.core.cim import DEFAULT_ARRAY
+    from repro.dse import design_grid, pareto_frontier, run_sweep
+
+    arrays = (
+        DEFAULT_ARRAY,
+        DEFAULT_ARRAY.variant(adc_bits=2),
+        DEFAULT_ARRAY.variant(rows=256, cols=256),
+    )
+    points = design_grid(
+        networks=("vgg11",),
+        pe_multipliers=tuple(np.linspace(1.0, 6.0, 67)),
+        arrays=arrays,
+    )
+    kw = dict(profile_images=1, sample_patches=64)
+    cold = run_sweep(points, **kw)  # includes jit compile
+    warm = run_sweep(points, **kw)
+    scalar = run_sweep(points, engine="scalar", **kw)
+    err = max(
+        np.abs((warm.total_cycles - scalar.total_cycles) / scalar.total_cycles).max(),
+        np.abs((warm.images_per_sec - scalar.images_per_sec) / scalar.images_per_sec).max(),
+        np.abs(
+            (warm.mean_utilization - scalar.mean_utilization) / scalar.mean_utilization
+        ).max(),
+    )
+    alloc_equal = bool((warm.arrays_used == scalar.arrays_used).all())
+    frontier = pareto_frontier(warm)
+    _row(
+        f"dse_sweep_vgg11_{len(points)}cfg",
+        warm.elapsed_s * 1e6,
+        f"speedup={scalar.elapsed_s / warm.elapsed_s:.1f}x;"
+        f"scalar_s={scalar.elapsed_s:.2f};batch_cold_s={cold.elapsed_s:.2f};"
+        f"max_rel_err={err:.1e};alloc_equal={alloc_equal};"
+        f"pareto_points={len(frontier)}",
+    )
+    for i in frontier[:: max(1, len(frontier) // 20)]:
+        p = warm.points[i]
+        _detail(
+            "dse_pareto", p.network, p.policy, p.n_pes,
+            f"{p.array.rows}x{p.array.cols}", f"adc{p.array.adc_bits}",
+            int(warm.arrays_total[i]), f"{warm.images_per_sec[i]:.1f}",
+            f"{warm.mean_utilization[i]:.3f}",
+        )
+
+
 ALL = {
     "fig4": fig4,
     "fig6": fig6,
@@ -398,6 +448,7 @@ ALL = {
     "fabric_tail": fabric_tail,
     "fabric_drift": fabric_drift,
     "fabric_multitenant": fabric_multitenant,
+    "dse": dse,
 }
 
 

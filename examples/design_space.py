@@ -1,0 +1,57 @@
+"""Design-space exploration over the CIM fabric (repro.dse).
+
+Sweeps (array geometry x ADC precision x PE budget x policy) for one
+network through the batched float64 allocate/simulate kernels, checks the
+batch against the scalar simulator, and prints the
+arrays-vs-throughput-vs-utilization Pareto frontier.
+
+  PYTHONPATH=src python examples/design_space.py [network]
+"""
+
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.core.cim import DEFAULT_ARRAY
+from repro.dse import design_grid, pareto_frontier, run_sweep
+
+
+def main() -> None:
+    network = sys.argv[1] if len(sys.argv) > 1 else "vgg11"
+    arrays = (
+        DEFAULT_ARRAY,  # 128x128, 3-bit ADC (the paper's PE)
+        DEFAULT_ARRAY.variant(adc_bits=2),  # cheaper ADC: more reads/plane
+        DEFAULT_ARRAY.variant(adc_bits=4),  # 16 rows summed per read
+        DEFAULT_ARRAY.variant(rows=256, cols=256),  # bigger crossbars
+    )
+    points = design_grid(
+        networks=(network,),
+        pe_multipliers=tuple(np.linspace(1.0, 6.0, 25)),
+        arrays=arrays,
+    )
+    print(f"sweeping {len(points)} design points on {network} ...")
+    res = run_sweep(points, profile_images=1, sample_patches=64)
+    res = run_sweep(points, profile_images=1, sample_patches=64)  # warm kernel
+    scalar = run_sweep(points, profile_images=1, sample_patches=64, engine="scalar")
+    err = np.abs((res.total_cycles - scalar.total_cycles) / scalar.total_cycles).max()
+    print(
+        f"batch {res.elapsed_s * 1e3:.1f} ms vs scalar {scalar.elapsed_s * 1e3:.1f} ms "
+        f"({scalar.elapsed_s / res.elapsed_s:.1f}x), max rel err {err:.2e}"
+    )
+
+    idx = pareto_frontier(res)
+    print(f"\nPareto frontier ({len(idx)} of {len(points)} points):")
+    print(f"{'arrays':>8} {'PEs':>5} {'adc':>4} {'geom':>9} {'policy':>16} {'img/s':>10} {'util':>6}")
+    for i in idx:
+        p = res.points[i]
+        print(
+            f"{res.arrays_total[i]:>8} {p.n_pes:>5} {p.array.adc_bits:>4} "
+            f"{p.array.rows}x{p.array.cols:<4} {p.policy:>16} "
+            f"{res.images_per_sec[i]:>10.1f} {res.mean_utilization[i]:>6.3f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

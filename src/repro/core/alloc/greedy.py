@@ -22,7 +22,14 @@ from dataclasses import dataclass
 
 import numpy as np
 
-__all__ = ["AllocationResult", "greedy_allocate", "proportional_allocate"]
+__all__ = [
+    "AllocationResult",
+    "BatchAllocationResult",
+    "greedy_allocate",
+    "greedy_allocate_batch",
+    "proportional_allocate",
+    "proportional_allocate_batch",
+]
 
 
 @dataclass(frozen=True)
@@ -107,6 +114,148 @@ def greedy_allocate(
     return AllocationResult(replicas, latency, spent, remaining)
 
 
+@dataclass(frozen=True)
+class BatchAllocationResult:
+    """Structure-of-arrays ``AllocationResult`` for C independent configs."""
+
+    replicas: np.ndarray  # (C, N) int64
+    latency: np.ndarray  # (C, N)
+    spent: np.ndarray  # (C,)
+    leftover: np.ndarray  # (C,)
+
+    @property
+    def makespan(self) -> np.ndarray:  # (C,)
+        if self.latency.shape[1] == 0:
+            return np.zeros(len(self))
+        return self.latency.max(axis=1)
+
+    def __len__(self) -> int:
+        return self.replicas.shape[0]
+
+
+_GREEDY_BATCH_JIT: dict = {}
+
+
+def _greedy_batch_kernel():
+    """Build (once) the jitted lock-step batched greedy kernel.
+
+    Two phases, both exactly replicating the scalar heap loop:
+
+    1.  *Bulk water-fill by bisection.*  The greedy's max-latency is
+        non-increasing, so for any makespan target ``lam`` the state
+        ``r_i = max(r0_i, ceil(base_i / lam))`` is a state the scalar greedy
+        passes through — provided its cost fits the budget (every
+        intermediate grant is then affordable, so the scalar stopping rule
+        cannot fire early).  We bisect ``lam`` to the tightest affordable
+        state, then back off by 1e-9 relative so grants at levels within
+        roundoff of the boundary are left to phase 2 (whose tie-breaking is
+        exact) rather than resolved by float ceil.
+    2.  *Lock-step residual loop.*  Grant the argmax-latency unit of every
+        config one replica per iteration; a config freezes the moment its
+        argmax is unaffordable (the paper's stopping rule — argmax ties
+        resolve to the lowest index, matching the scalar heap order).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    def kernel(base, cost, budget, r0):
+        N = base.shape[1]
+
+        def r_of(lam):
+            return jnp.maximum(r0, jnp.ceil(base / lam[:, None]))
+
+        def spend_of(r):
+            return ((r - r0) * cost).sum(axis=1)
+
+        lat0 = base / r0
+        hi = jnp.maximum(lat0.max(axis=1), 1e-300)  # degenerate all-zero rows
+        min_cost = cost.min(axis=1)
+        # strictly below the final greedy makespan -> provably infeasible
+        lo = hi / (2.0 * (2.0 + jnp.maximum(budget, 0.0) / min_cost))
+
+        def bisect(_, lohi):
+            lo, hi = lohi
+            mid = 0.5 * (lo + hi)
+            feasible = spend_of(r_of(mid)) <= budget
+            return jnp.where(feasible, lo, mid), jnp.where(feasible, mid, hi)
+
+        lo, hi = jax.lax.fori_loop(0, 80, bisect, (lo, hi))
+        r = r_of(hi * (1.0 + 1e-9))
+        rem = budget - spend_of(r)
+
+        idx = jnp.arange(N)
+
+        def not_done(state):
+            return ~state[2].all()
+
+        def grant(state):
+            r, rem, done = state
+            lat = base / r
+            i = lat.argmax(axis=1)  # first max == scalar heap tie order
+            ci = jnp.take_along_axis(cost, i[:, None], axis=1)[:, 0]
+            ok = (ci <= rem) & ~done
+            r = r + ((idx[None, :] == i[:, None]) & ok[:, None])
+            rem = rem - jnp.where(ok, ci, 0.0)
+            return r, rem, done | ~ok
+
+        done = jnp.zeros(base.shape[0], dtype=bool)
+        r, rem, done = jax.lax.while_loop(not_done, grant, (r, rem, done))
+        return r, rem
+
+    return jax.jit(kernel)
+
+
+def greedy_allocate_batch(
+    base_latency: np.ndarray,
+    unit_cost: np.ndarray,
+    budgets: np.ndarray,
+    *,
+    initial_replicas: np.ndarray | None = None,
+) -> BatchAllocationResult:
+    """Vectorized ``greedy_allocate`` over C configs, lock-step in jnp.
+
+    ``base_latency`` / ``unit_cost`` / ``initial_replicas`` broadcast from
+    (N,) to (C, N); ``budgets`` is (C,).  Replica counts are element-wise
+    identical to looping the scalar allocator (the property suite pins
+    this); ``spent`` / ``leftover`` agree to float roundoff.  Runs in
+    float64 under ``jax.experimental.enable_x64``.
+    """
+    budgets = np.atleast_1d(np.asarray(budgets, dtype=np.float64))
+    C = budgets.shape[0]
+    base = np.atleast_1d(np.asarray(base_latency, dtype=np.float64))
+    cost = np.atleast_1d(np.asarray(unit_cost, dtype=np.float64))
+    if base.shape[-1] != cost.shape[-1]:
+        raise ValueError(f"base_latency {base.shape} vs unit_cost {cost.shape}")
+    N = base.shape[-1]
+    base = np.ascontiguousarray(np.broadcast_to(base, (C, N)))
+    cost = np.ascontiguousarray(np.broadcast_to(cost, (C, N)))
+    if np.any(cost <= 0):
+        raise ValueError("unit_cost must be strictly positive")
+    if initial_replicas is None:
+        r0 = np.ones((C, N))
+    else:
+        r0 = np.ascontiguousarray(
+            np.broadcast_to(np.asarray(initial_replicas, dtype=np.float64), (C, N))
+        )
+        if np.any(r0 < 1):
+            raise ValueError("every unit needs at least one replica")
+    if N == 0:
+        return BatchAllocationResult(
+            np.ones((C, 0), dtype=np.int64), base.copy(), np.zeros(C), budgets.copy()
+        )
+
+    from jax.experimental import enable_x64
+
+    if "kernel" not in _GREEDY_BATCH_JIT:
+        _GREEDY_BATCH_JIT["kernel"] = _greedy_batch_kernel()
+    with enable_x64():
+        r, rem = _GREEDY_BATCH_JIT["kernel"](base, cost, budgets, r0)
+    r = np.asarray(r)
+    replicas = r.astype(np.int64)
+    spent = ((r - r0) * cost).sum(axis=1)
+    return BatchAllocationResult(replicas, base / r, spent, np.asarray(rem))
+
+
 def proportional_allocate(
     weight: np.ndarray,
     unit_cost: np.ndarray,
@@ -143,3 +292,50 @@ def proportional_allocate(
             spent += unit_cost[i]
     latency = weight / replicas
     return AllocationResult(replicas, latency, spent, remaining)
+
+
+def proportional_allocate_batch(
+    weight: np.ndarray,
+    unit_cost: np.ndarray,
+    budgets: np.ndarray,
+) -> BatchAllocationResult:
+    """``proportional_allocate`` over C budgets, vectorized in numpy.
+
+    Element-wise identical to looping the scalar routine: the share /
+    floor arithmetic broadcasts unchanged, and ``np.argsort(-frac, axis=1)``
+    applies the same introsort per row as the scalar's per-config call, so
+    even unstable tie orders agree.  The largest-remainder top-up walks the
+    N sorted positions lock-step across configs.
+    """
+    budgets = np.atleast_1d(np.asarray(budgets, dtype=np.float64))
+    weight = np.atleast_1d(np.asarray(weight, dtype=np.float64))
+    cost = np.atleast_1d(np.asarray(unit_cost, dtype=np.float64))
+    C = budgets.shape[0]
+    N = weight.shape[-1]
+    weight = np.broadcast_to(weight, (C, N))
+    cost = np.broadcast_to(cost, (C, N))
+    replicas = np.ones((C, N), dtype=np.int64)
+    if N == 0 or C == 0:
+        return BatchAllocationResult(
+            replicas, weight / replicas, np.zeros(C), budgets.copy()
+        )
+
+    act = budgets > 0  # scalar early-returns all-ones below/at zero budget
+    total_w = weight.sum(axis=1)
+    share = weight / total_w[:, None] * budgets[:, None]
+    extra = np.where(act[:, None], np.floor(share / cost).astype(np.int64), 0)
+    replicas = replicas + np.maximum(extra, 0)
+    spent = (extra * cost).sum(axis=1)
+    remaining = budgets - spent
+    # largest-remainder top-up, lock-step over the N sorted positions
+    frac = share / cost - extra
+    order = np.argsort(-frac, axis=1)
+    rows = np.arange(C)
+    for k in range(N):
+        i = order[:, k]
+        ci = cost[rows, i]
+        ok = act & (ci <= remaining)
+        replicas[rows[ok], i[ok]] += 1
+        remaining = np.where(ok, remaining - ci, remaining)
+        spent = np.where(ok, spent + ci, spent)
+    return BatchAllocationResult(replicas, weight / replicas, spent, remaining)

@@ -7,14 +7,20 @@ from .cost import (
     bitplane_ones,
     expected_cycles_from_density,
     zskip_cycles,
+    zskip_cycles_from_ones,
 )
-from .network import LayerSpec, NetworkSpec, resnet18_imagenet, vgg11_cifar10
+from .network import LayerSpec, NetworkSpec, resnet18_imagenet, vgg11_cifar10, with_array
 from .profile import NetworkProfile, LayerProfile, profile_network, synthetic_images
 from .simulate import (
+    POLICIES,
     Allocation,
+    BatchSimResult,
+    BatchSimulator,
     SimResult,
+    SimTensors,
     allocate,
     blockwise_units,
+    pack_profile,
     run_policy,
     simulate,
     split_block_dups,
@@ -27,18 +33,25 @@ __all__ = [
     "bitplane_ones",
     "expected_cycles_from_density",
     "zskip_cycles",
+    "zskip_cycles_from_ones",
     "LayerSpec",
     "NetworkSpec",
     "resnet18_imagenet",
     "vgg11_cifar10",
+    "with_array",
     "NetworkProfile",
     "LayerProfile",
     "profile_network",
     "synthetic_images",
+    "POLICIES",
     "Allocation",
+    "BatchSimResult",
+    "BatchSimulator",
     "SimResult",
+    "SimTensors",
     "allocate",
     "blockwise_units",
+    "pack_profile",
     "run_policy",
     "simulate",
     "split_block_dups",

@@ -22,7 +22,7 @@ the paper's stated range.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
 import numpy as np
 
@@ -30,6 +30,7 @@ __all__ = [
     "ArrayConfig",
     "bitplane_ones",
     "zskip_cycles",
+    "zskip_cycles_from_ones",
     "baseline_cycles",
     "expected_cycles_from_density",
 ]
@@ -65,6 +66,12 @@ class ArrayConfig:
         reads = -(-self.rows // self.rows_per_read)
         return self.input_bits * reads * self.cycles_per_read
 
+    def variant(self, **changes) -> "ArrayConfig":
+        """A modified copy — the design-space sweep axis (e.g.
+        ``DEFAULT_ARRAY.variant(adc_bits=2)`` or ``.variant(rows=256,
+        cols=256)``)."""
+        return replace(self, **changes)
+
 
 DEFAULT_ARRAY = ArrayConfig()
 
@@ -86,6 +93,18 @@ def bitplane_ones(patches_u8: np.ndarray) -> np.ndarray:
     return bits.sum(axis=-2, dtype=np.int64)
 
 
+def zskip_cycles_from_ones(
+    ones: np.ndarray, cfg: ArrayConfig = DEFAULT_ARRAY
+) -> np.ndarray:
+    """Cycles given per-bit-plane active-row counts (..., input_bits).
+
+    Split out of ``zskip_cycles`` so ADC-precision sweeps can re-cost cached
+    bit statistics without re-running the network forward pass.
+    """
+    reads = np.maximum(1, -(-np.asarray(ones) // cfg.rows_per_read))
+    return cfg.cycles_per_read * reads.sum(axis=-1)
+
+
 def zskip_cycles(
     patches_u8: np.ndarray, cfg: ArrayConfig = DEFAULT_ARRAY
 ) -> np.ndarray:
@@ -94,9 +113,7 @@ def zskip_cycles(
     patches_u8: (..., rows) uint8 — rows <= cfg.rows.
     Returns: (...) int64 cycles.
     """
-    ones = bitplane_ones(patches_u8)  # (..., 8)
-    reads = np.maximum(1, -(-ones // cfg.rows_per_read))
-    return cfg.cycles_per_read * reads.sum(axis=-1)
+    return zskip_cycles_from_ones(bitplane_ones(patches_u8), cfg)
 
 
 def baseline_cycles(

@@ -14,7 +14,7 @@ matching the counts quoted in the paper (Fig 5 shows layer 10: a
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 
@@ -25,6 +25,7 @@ __all__ = [
     "NetworkSpec",
     "resnet18_imagenet",
     "vgg11_cifar10",
+    "with_array",
 ]
 
 
@@ -95,6 +96,16 @@ class NetworkSpec:
             for bi in range(layer.n_blocks):
                 out.append((li, bi, layer.arrays_per_block))
         return np.asarray(out, dtype=np.int64)
+
+
+def with_array(spec: NetworkSpec, array: ArrayConfig) -> NetworkSpec:
+    """Retarget a network onto a different crossbar geometry / ADC config.
+
+    The lowered matrix shapes are unchanged; tiling (blocks, arrays per
+    block) re-derives from the new array.  This is the geometry axis of the
+    design-space sweep (``repro.dse``).
+    """
+    return NetworkSpec(spec.name, tuple(replace(l, array=array) for l in spec.layers))
 
 
 def resnet18_imagenet() -> NetworkSpec:

@@ -190,13 +190,23 @@ def profile_network(
     image_hw: int | None = None,
     sample_patches: int = 256,
     seed: int = 0,
+    array: ArrayConfig | None = None,
 ) -> NetworkProfile:
     key = jax.random.PRNGKey(seed)
     kimg, kw = jax.random.split(key)
     if image_hw is None:
         image_hw = 224 if spec.name == "resnet18" else 32
+    if array is None:
+        # derive from the spec so swept geometries (dse.with_array) profile
+        # with the array they will run on, not the default
+        configs = {l.array for l in spec.layers}
+        if len(configs) != 1:
+            raise ValueError(
+                f"{spec.name} mixes {len(configs)} array configs; pass array= explicitly"
+            )
+        (array,) = configs
     x = synthetic_images(n_images, image_hw, kimg)
-    prof = _Profiler(spec, kw, sample_patches)
+    prof = _Profiler(spec, kw, sample_patches, array=array)
     if spec.name == "resnet18":
         _forward_resnet18(prof, x)
     elif spec.name == "vgg11":

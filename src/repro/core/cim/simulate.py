@@ -29,6 +29,18 @@ Dataflow model (steady-state pipelined throughput):
 Per-patch cycles come from the profiled sample (see profile.py); sums over
 all patches are scaled from the sample mean.  Utilization = busy array-cycles
 / (arrays alive x T), per layer — the paper's Figure 9.
+
+Array-kernel core
+-----------------
+The simulator is implemented as a pure array kernel over a *packed* profile
+(``pack_profile`` -> ``SimTensors``): per-layer (S, B) cycle samples are
+padded to a dense (L, S, Bmax) tensor with validity masks, reduced once to
+sufficient statistics, and evaluated by ``_eval_kernel`` — plain array
+algebra parameterized on the array module ``xp``.  The scalar ``simulate()``
+runs it with ``xp=numpy`` (float64, drop-in API for the fabric runtime);
+``BatchSimulator`` runs the same kernel with ``xp=jax.numpy`` under
+``vmap``+``jit`` (x64) over a batch of allocations — the engine behind
+``repro.dse`` design-space sweeps.
 """
 
 from __future__ import annotations
@@ -44,9 +56,14 @@ from .profile import NetworkProfile
 
 __all__ = [
     "Policy",
+    "POLICIES",
     "Allocation",
     "SimResult",
+    "SimTensors",
+    "BatchSimResult",
+    "BatchSimulator",
     "allocate",
+    "pack_profile",
     "simulate",
     "run_policy",
     "blockwise_units",
@@ -62,6 +79,13 @@ Policy = Literal[
     # the paper's two contributions (the paper reports them fused)
     "weight_blockflow",
 ]
+POLICIES: tuple[Policy, ...] = (
+    "baseline",
+    "weight_based",
+    "perf_layerwise",
+    "blockwise",
+    "weight_blockflow",
+)
 ARRAYS_PER_PE = 64
 CLOCK_HZ = 100e6
 
@@ -189,6 +213,154 @@ def allocate(
     raise ValueError(policy)
 
 
+# ------------------------------------------------------- array-kernel core
+@dataclass(frozen=True)
+class SimTensors:
+    """Packed (NetworkSpec, NetworkProfile) pair: padded cycle tensors plus
+    the sufficient statistics the dataflow model needs.
+
+    Leading axis 2 on the per-variant arrays selects zero-skipping:
+    index 0 = baseline (deterministic cycles), 1 = zero-skipping.
+    """
+
+    cycles: np.ndarray  # (2, L, S, B) per-patch per-block cycles, 0-padded
+    s_mask: np.ndarray  # (L, S) valid patch samples
+    b_mask: np.ndarray  # (L, B) valid blocks
+    ppi: np.ndarray  # (L,) patches per image
+    width: np.ndarray  # (L,) arrays per block
+    layer_arrays: np.ndarray  # (L,) arrays in one copy of the layer
+    n_blocks: np.ndarray  # (L,) valid block count
+    # derived statistics (2, ...):
+    mean_b: np.ndarray  # (2, L, B) E_S[c]
+    max_b: np.ndarray  # (2, L, B) max_S c
+    pm_mean: np.ndarray  # (2, L) E_S[max_B c]  (layer-wise barrier)
+    pm_max: np.ndarray  # (2, L) max_S max_B c
+    busy_sum: np.ndarray  # (2, L) sum_B E_S[c]  (busy cycles per patch)
+
+    @property
+    def L(self) -> int:
+        return self.b_mask.shape[0]
+
+    @property
+    def B(self) -> int:
+        return self.b_mask.shape[1]
+
+
+# keyed on object identity (the frozen dataclasses hold numpy arrays, so
+# they are not hashable); weakref finalizers evict entries before an id can
+# be reused, keeping repeated scalar simulate() calls from re-packing
+_PACK_CACHE: dict[tuple[int, int], SimTensors] = {}
+
+
+def pack_profile(spec: NetworkSpec, prof: NetworkProfile) -> SimTensors:
+    """Pad per-layer (S, B) cycle samples into dense tensors + statistics.
+
+    Cached per (spec, profile) object pair — the tensors are pure functions
+    of the inputs and every ``simulate()`` call needs them."""
+    import weakref
+
+    key = (id(spec), id(prof))
+    hit = _PACK_CACHE.get(key)
+    if hit is not None:
+        return hit
+    st = _pack_profile(spec, prof)
+    _PACK_CACHE[key] = st
+    weakref.finalize(spec, _PACK_CACHE.pop, key, None)
+    weakref.finalize(prof, _PACK_CACHE.pop, key, None)
+    return st
+
+
+def _pack_profile(spec: NetworkSpec, prof: NetworkProfile) -> SimTensors:
+    L = len(spec.layers)
+    variants = [_layer_patch_cycles(prof, False), _layer_patch_cycles(prof, True)]
+    S = max(c.shape[0] for c in variants[1])
+    B = max(l.n_blocks for l in spec.layers)
+    cycles = np.zeros((2, L, S, B))
+    s_mask = np.zeros((L, S), dtype=bool)
+    b_mask = np.zeros((L, B), dtype=bool)
+    for v, cyc in enumerate(variants):
+        for i, c in enumerate(cyc):
+            s, b = c.shape
+            cycles[v, i, :s, :b] = c
+            s_mask[i, :s] = True
+            b_mask[i, :b] = True
+    s_count = s_mask.sum(axis=1)  # (L,)
+    mean_b = cycles.sum(axis=2) / s_count[None, :, None]
+    max_b = cycles.max(axis=2)  # padded entries are 0 <= any real cycle count
+    patch_max = np.where(b_mask[None, :, None, :], cycles, -np.inf).max(axis=3)
+    pm_mean = np.where(s_mask, patch_max, 0.0).sum(axis=2) / s_count[None, :]
+    pm_max = np.where(s_mask, patch_max, -np.inf).max(axis=2)
+    busy_sum = np.where(b_mask, mean_b, 0.0).sum(axis=2)
+    return SimTensors(
+        cycles=cycles,
+        s_mask=s_mask,
+        b_mask=b_mask,
+        ppi=np.array([l.patches_per_image for l in spec.layers], dtype=np.float64),
+        width=np.array([l.arrays_per_block for l in spec.layers], dtype=np.float64),
+        layer_arrays=np.array([l.n_arrays for l in spec.layers], dtype=np.float64),
+        n_blocks=np.array([l.n_blocks for l in spec.layers], dtype=np.int64),
+        mean_b=mean_b,
+        max_b=max_b,
+        pm_mean=pm_mean,
+        pm_max=pm_max,
+        busy_sum=busy_sum,
+    )
+
+
+def _eval_kernel(
+    xp,
+    mean_b,  # (L, B) — zskip variant already selected
+    max_b,  # (L, B)
+    pm_mean,  # (L,)
+    pm_max,  # (L,)
+    busy_sum,  # (L,)
+    b_mask,  # (L, B)
+    ppi,  # (L,)
+    width,  # (L,)
+    layer_arrays,  # (L,)
+    dups_lb,  # (L, B) float replicas (layer-wise: broadcast along B)
+    layerwise,  # scalar bool: barrier (layer-wise) vs independent blocks
+    n_images,
+    clock_hz,
+):
+    """One allocation -> (T, img/s, per-layer makespan, per-layer util).
+
+    Pure array algebra: runs identically with ``xp=numpy`` (scalar float64
+    path) and ``xp=jax.numpy`` (vmapped batch path).
+    """
+    P = ppi * n_images  # (L,) patches in the batch
+    d_layer = dups_lb[:, 0]
+    # layer-wise: patches synchronize on the slowest block (barrier)
+    t_lw = xp.maximum(pm_mean * P / d_layer, pm_max)
+    # block-wise: every block is an independent replicated server pool
+    per_block = xp.maximum(mean_b * P[:, None] / dups_lb, max_b)
+    t_bw = xp.where(b_mask, per_block, -xp.inf).max(axis=-1)
+    layer_T = xp.where(layerwise, t_lw, t_bw)
+    alive = xp.where(
+        layerwise,
+        layer_arrays * d_layer,
+        xp.where(b_mask, dups_lb * width[:, None], 0.0).sum(axis=-1),
+    )
+    # busy cycles are allocation-independent: every (patch, block) job runs
+    # exactly once on `width` arrays.
+    busy = busy_sum * P * width
+    T = layer_T.max()
+    util = busy / (alive * T)
+    ips = n_images / (T / clock_hz)
+    return T, ips, layer_T, util
+
+
+def _alloc_to_dups(st: SimTensors, alloc: Allocation) -> tuple[np.ndarray, bool]:
+    """Allocation -> dense (L, B) replica matrix + layer-wise dataflow flag."""
+    dups = np.ones((st.L, st.B))
+    if alloc.layer_dups is not None:
+        dups *= np.asarray(alloc.layer_dups, dtype=np.float64)[:, None]
+        return dups, True
+    for i, d in enumerate(alloc.block_dups):
+        dups[i, : len(d)] = np.asarray(d, dtype=np.float64)
+    return dups, False
+
+
 def simulate(
     spec: NetworkSpec,
     prof: NetworkProfile,
@@ -196,35 +368,112 @@ def simulate(
     n_images: int = 64,
     clock_hz: float = CLOCK_HZ,
 ) -> SimResult:
-    zskip = alloc.policy != "baseline"
-    cyc = _layer_patch_cycles(prof, zskip)
-    L = len(spec.layers)
-    layer_T = np.zeros(L)
-    busy = np.zeros(L)  # busy array-cycles
-    arrays_alive = np.zeros(L)
+    st = pack_profile(spec, prof)
+    z = int(alloc.policy != "baseline")
+    dups_lb, layerwise = _alloc_to_dups(st, alloc)
+    T, ips, layer_T, util = _eval_kernel(
+        np,
+        st.mean_b[z],
+        st.max_b[z],
+        st.pm_mean[z],
+        st.pm_max[z],
+        st.busy_sum[z],
+        st.b_mask,
+        st.ppi,
+        st.width,
+        st.layer_arrays,
+        dups_lb,
+        layerwise,
+        n_images,
+        clock_hz,
+    )
+    return SimResult(alloc.policy, float(T), float(ips), layer_T, util, alloc.arrays_used)
 
-    for i, layer in enumerate(spec.layers):
-        c = cyc[i]  # (S, B) per-patch-per-block cycles
-        P = layer.patches_per_image * n_images
-        width = layer.arrays_per_block
-        if alloc.layer_dups is not None:
-            d = float(alloc.layer_dups[i])
-            patch_t = c.max(axis=1)  # barrier: slowest block per patch
-            layer_T[i] = max(patch_t.mean() * P / d, patch_t.max())
-            arrays_alive[i] = layer.n_arrays * d
-        else:
-            dups = alloc.block_dups[i].astype(np.float64)  # (B,)
-            per_block = np.maximum(c.mean(axis=0) * P / dups, c.max(axis=0))
-            layer_T[i] = per_block.max()
-            arrays_alive[i] = float((dups * width).sum())
-        # busy cycles are allocation-independent: every (patch, block) job
-        # runs exactly once on `width` arrays.
-        busy[i] = c.mean(axis=0).sum() * P * width
 
-    T = float(layer_T.max())  # pipelined bottleneck
-    util = busy / (arrays_alive * T)
-    ips = n_images / (T / clock_hz)
-    return SimResult(alloc.policy, T, ips, layer_T, util, alloc.arrays_used)
+# ----------------------------------------------------------- batched engine
+@dataclass(frozen=True)
+class BatchSimResult:
+    """Structure-of-arrays ``SimResult`` for a batch of C allocations."""
+
+    total_cycles: np.ndarray  # (C,)
+    images_per_sec: np.ndarray  # (C,)
+    layer_cycles: np.ndarray  # (C, L)
+    layer_utilization: np.ndarray  # (C, L)
+
+    @property
+    def mean_utilization(self) -> np.ndarray:  # (C,)
+        return self.layer_utilization.mean(axis=1)
+
+    def __len__(self) -> int:
+        return self.total_cycles.shape[0]
+
+
+class BatchSimulator:
+    """jit + vmap of ``_eval_kernel`` over a batch of allocations.
+
+    One instance per (spec, profile); the packed tensors are baked into the
+    compiled kernel as constants.  Runs in float64 (``jax.experimental
+    .enable_x64``) so batch results match the scalar ``simulate()`` to
+    roundoff — the golden-equivalence suite pins this at 1e-9.
+    """
+
+    def __init__(self, spec: NetworkSpec, prof: NetworkProfile):
+        self.spec = spec
+        self.tensors = pack_profile(spec, prof)
+        self._compiled: dict[tuple, object] = {}
+
+    def _fn(self, n_images: int, clock_hz: float):
+        key = (n_images, clock_hz)
+        if key not in self._compiled:
+            import jax
+            import jax.numpy as jnp
+
+            st = self.tensors
+
+            def one(dups_lb, layerwise, zskip):
+                pick = lambda a: jnp.where(zskip, a[1], a[0])  # noqa: E731
+                return _eval_kernel(
+                    jnp,
+                    pick(st.mean_b),
+                    pick(st.max_b),
+                    pick(st.pm_mean),
+                    pick(st.pm_max),
+                    pick(st.busy_sum),
+                    st.b_mask,
+                    st.ppi,
+                    st.width,
+                    st.layer_arrays,
+                    dups_lb,
+                    layerwise,
+                    n_images,
+                    clock_hz,
+                )
+
+            self._compiled[key] = jax.jit(jax.vmap(one))
+        return self._compiled[key]
+
+    def __call__(
+        self,
+        dups_lb: np.ndarray,  # (C, L, B) float replicas
+        layerwise: np.ndarray,  # (C,) bool
+        zskip: np.ndarray,  # (C,) bool
+        n_images: int = 64,
+        clock_hz: float = CLOCK_HZ,
+    ) -> BatchSimResult:
+        from jax.experimental import enable_x64
+
+        dups_lb = np.asarray(dups_lb, dtype=np.float64)
+        if dups_lb.ndim != 3 or dups_lb.shape[1:] != (self.tensors.L, self.tensors.B):
+            raise ValueError(
+                f"dups_lb {dups_lb.shape} != (C, {self.tensors.L}, {self.tensors.B})"
+            )
+        with enable_x64():
+            T, ips, layer_T, util = self._fn(int(n_images), float(clock_hz))(
+                dups_lb, np.asarray(layerwise, bool), np.asarray(zskip, bool)
+            )
+        return BatchSimResult(
+            np.asarray(T), np.asarray(ips), np.asarray(layer_T), np.asarray(util)
+        )
 
 
 def run_policy(

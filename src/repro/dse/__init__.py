@@ -1,0 +1,34 @@
+"""Vectorized design-space exploration over the analytic CIM simulator.
+
+The paper reports one design point; this package sweeps thousands —
+(array geometry, ADC precision, PE budget, allocation policy, network) —
+through the batched float64 allocate/simulate kernels and extracts the
+arrays-vs-throughput-vs-utilization Pareto frontier.
+"""
+
+from .engine import AllocationBatch, allocate_batch, run_batch, to_allocation
+from .pareto import DEFAULT_OBJECTIVES, pareto_frontier, pareto_mask
+from .sweep import (
+    SweepPoint,
+    SweepResult,
+    clear_caches,
+    design_grid,
+    get_profiled,
+    run_sweep,
+)
+
+__all__ = [
+    "AllocationBatch",
+    "allocate_batch",
+    "run_batch",
+    "to_allocation",
+    "DEFAULT_OBJECTIVES",
+    "pareto_frontier",
+    "pareto_mask",
+    "SweepPoint",
+    "SweepResult",
+    "clear_caches",
+    "design_grid",
+    "get_profiled",
+    "run_sweep",
+]

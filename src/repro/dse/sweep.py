@@ -1,0 +1,224 @@
+"""Cartesian design-space sweeps (array geometry x ADC x PE count x policy
+x network) with profile caching.
+
+Profiling is the expensive, config-independent step (a quantized forward
+pass per (network, ArrayConfig) pair — see profile.py), so profiles are
+cached keyed on the array config + profile parameters and shared between the
+batched and scalar engines.  ``run_sweep`` groups points by (network, array)
+— every group shares one packed-profile ``BatchSimulator`` — and evaluates
+each group with two jit calls; ``engine="scalar"`` runs the identical points
+through the per-config ``allocate``/``simulate`` loop (the pre-refactor
+path) for equivalence checks and speedup measurement.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.cim.cost import ArrayConfig, DEFAULT_ARRAY
+from ..core.cim.network import NetworkSpec, resnet18_imagenet, vgg11_cifar10, with_array
+from ..core.cim.profile import NetworkProfile, profile_network
+from ..core.cim.simulate import (
+    ARRAYS_PER_PE,
+    POLICIES,
+    BatchSimulator,
+    allocate,
+    simulate,
+)
+from .engine import run_batch
+
+__all__ = [
+    "SweepPoint",
+    "SweepResult",
+    "design_grid",
+    "run_sweep",
+    "get_profiled",
+    "clear_caches",
+]
+
+_SPEC_FNS = {"resnet18": resnet18_imagenet, "vgg11": vgg11_cifar10}
+_PROFILE_CACHE: dict[tuple, tuple[NetworkSpec, NetworkProfile]] = {}
+_SIMULATOR_CACHE: dict[tuple, BatchSimulator] = {}
+
+
+@dataclass(frozen=True)
+class SweepPoint:
+    """One design point: what to build (array, PEs) and how to run it."""
+
+    network: str
+    policy: str
+    n_pes: int
+    array: ArrayConfig = DEFAULT_ARRAY
+
+
+@dataclass
+class SweepResult:
+    """Columnar sweep outcome; row i corresponds to ``points[i]``."""
+
+    points: list[SweepPoint]
+    total_cycles: np.ndarray
+    images_per_sec: np.ndarray
+    mean_utilization: np.ndarray
+    arrays_used: np.ndarray
+    arrays_total: np.ndarray
+    elapsed_s: float
+    engine: str
+
+    def __len__(self) -> int:
+        return len(self.points)
+
+    def rows(self) -> list[dict]:
+        return [
+            {
+                "network": p.network,
+                "policy": p.policy,
+                "n_pes": p.n_pes,
+                "adc_bits": p.array.adc_bits,
+                "array_rows": p.array.rows,
+                "total_cycles": float(self.total_cycles[i]),
+                "images_per_sec": float(self.images_per_sec[i]),
+                "mean_utilization": float(self.mean_utilization[i]),
+                "arrays_used": int(self.arrays_used[i]),
+                "arrays_total": int(self.arrays_total[i]),
+            }
+            for i, p in enumerate(self.points)
+        ]
+
+    def objectives(self, names: tuple[str, ...]) -> np.ndarray:
+        """(C, len(names)) matrix of the named columns (pareto input)."""
+        return np.stack([np.asarray(getattr(self, n), dtype=np.float64) for n in names], axis=1)
+
+
+def _spec_for(network: str, array: ArrayConfig) -> NetworkSpec:
+    if network not in _SPEC_FNS:
+        raise ValueError(f"unknown network {network!r}; choose from {sorted(_SPEC_FNS)}")
+    return with_array(_SPEC_FNS[network](), array)
+
+
+def get_profiled(
+    network: str,
+    array: ArrayConfig = DEFAULT_ARRAY,
+    *,
+    profile_images: int = 1,
+    sample_patches: int = 128,
+    seed: int = 0,
+) -> tuple[NetworkSpec, NetworkProfile]:
+    """Cached (spec, profile) for a (network, array-config) pair."""
+    _spec_for(network, array)  # validate the name before the cache lookup
+    key = (network, array, profile_images, sample_patches, seed)
+    if key not in _PROFILE_CACHE:
+        spec = _spec_for(network, array)
+        prof = profile_network(
+            spec, n_images=profile_images, sample_patches=sample_patches, seed=seed
+        )
+        _PROFILE_CACHE[key] = (spec, prof)
+    return _PROFILE_CACHE[key]
+
+
+def clear_caches() -> None:
+    _PROFILE_CACHE.clear()
+    _SIMULATOR_CACHE.clear()
+
+
+def design_grid(
+    networks=("resnet18",),
+    policies=POLICIES,
+    pe_multipliers=(1.0, 1.41, 2.0, 2.83, 4.0, 5.66),
+    arrays=(DEFAULT_ARRAY,),
+    arrays_per_pe: int = ARRAYS_PER_PE,
+) -> list[SweepPoint]:
+    """Cartesian grid; PE budgets scale each (network, array)'s minimum
+    design size so every point is feasible."""
+    points = []
+    for net in networks:
+        for arr in arrays:
+            spec = _spec_for(net, arr)
+            base = spec.min_pes(arrays_per_pe)
+            for m in pe_multipliers:
+                n_pes = max(base, int(np.ceil(base * m)))
+                for pol in policies:
+                    points.append(SweepPoint(net, pol, n_pes, arr))
+    return points
+
+
+def run_sweep(
+    points: list[SweepPoint],
+    *,
+    n_images: int = 64,
+    profile_images: int = 1,
+    sample_patches: int = 128,
+    seed: int = 0,
+    arrays_per_pe: int = ARRAYS_PER_PE,
+    engine: str = "batch",
+) -> SweepResult:
+    """Evaluate every point; profiles are cached and excluded from timing."""
+    if engine not in ("batch", "scalar"):
+        raise ValueError(f"engine must be 'batch' or 'scalar', got {engine!r}")
+    C = len(points)
+    out = {
+        name: np.zeros(C)
+        for name in ("total_cycles", "images_per_sec", "mean_utilization")
+    }
+    used = np.zeros(C, dtype=np.int64)
+    total = np.zeros(C, dtype=np.int64)
+
+    # group rows by (network, array) — one packed profile per group
+    groups: dict[tuple, list[int]] = {}
+    for i, p in enumerate(points):
+        groups.setdefault((p.network, p.array), []).append(i)
+    prof_kw = dict(
+        profile_images=profile_images, sample_patches=sample_patches, seed=seed
+    )
+    for net, arr in groups:  # warm the cache outside the timed region
+        get_profiled(net, arr, **prof_kw)
+
+    elapsed = 0.0
+    for (net, arr), rows in groups.items():
+        spec, prof = get_profiled(net, arr, **prof_kw)
+        idx = np.asarray(rows)
+        pols = np.array([points[i].policy for i in rows], dtype=object)
+        pes = np.array([points[i].n_pes for i in rows], dtype=np.int64)
+        t0 = time.perf_counter()
+        if engine == "batch":
+            key = (net, arr, profile_images, sample_patches, seed)
+            if key not in _SIMULATOR_CACHE:
+                _SIMULATOR_CACHE[key] = BatchSimulator(spec, prof)
+            alloc, res = run_batch(
+                spec,
+                prof,
+                pols,
+                pes,
+                n_images=n_images,
+                arrays_per_pe=arrays_per_pe,
+                simulator=_SIMULATOR_CACHE[key],
+            )
+            out["total_cycles"][idx] = res.total_cycles
+            out["images_per_sec"][idx] = res.images_per_sec
+            out["mean_utilization"][idx] = res.mean_utilization
+            used[idx] = alloc.arrays_used
+            total[idx] = alloc.arrays_total
+        else:
+            for i in rows:
+                p = points[i]
+                a = allocate(spec, prof, p.policy, p.n_pes, arrays_per_pe)
+                s = simulate(spec, prof, a, n_images=n_images)
+                out["total_cycles"][i] = s.total_cycles
+                out["images_per_sec"][i] = s.images_per_sec
+                out["mean_utilization"][i] = s.mean_utilization
+                used[i] = a.arrays_used
+                total[i] = a.arrays_total
+        elapsed += time.perf_counter() - t0
+
+    return SweepResult(
+        points=list(points),
+        total_cycles=out["total_cycles"],
+        images_per_sec=out["images_per_sec"],
+        mean_utilization=out["mean_utilization"],
+        arrays_used=used,
+        arrays_total=total,
+        elapsed_s=elapsed,
+        engine=engine,
+    )

@@ -1,0 +1,24 @@
+"""Tier-1 fast/slow split.
+
+``pyproject.toml`` deselects ``-m slow`` by default so the PR job stays
+under five minutes; the nightly CI job runs ``pytest -m slow``.  Besides
+explicitly marked tests (full DSE sweeps), the heaviest per-architecture
+smoke params are moved to the slow tier here — the fast tier keeps one
+representative of every model family (SSM: mamba2, MoE: grok, dense GQA:
+glm4/qwen2.5, VL: qwen2-vl, enc-dec: whisper)."""
+
+import pytest
+
+SLOW_ARCHES = {"zamba2-1.2b", "nemotron-4-15b", "deepseek-v2-236b", "qwen1.5-110b"}
+SLOW_MODULES = {"test_arch_smoke.py"}
+
+
+def pytest_collection_modifyitems(config, items):
+    for item in items:
+        if item.path.name not in SLOW_MODULES:
+            continue
+        callspec = getattr(item, "callspec", None)
+        if callspec and any(
+            v in SLOW_ARCHES for v in callspec.params.values() if isinstance(v, str)
+        ):
+            item.add_marker(pytest.mark.slow)

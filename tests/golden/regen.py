@@ -1,0 +1,72 @@
+"""Regenerate the pinned scalar-simulator fixtures in tests/golden/.
+
+The fixtures pin ``allocate()``/``simulate()`` outputs (float64, all 5
+policies, 2 design sizes per network) so refactors of the simulator core are
+provably behavior-preserving (tests/test_golden_equivalence.py).  Only
+re-run this after an INTENTIONAL behavior change, and say so in the commit:
+
+  PYTHONPATH=src python tests/golden/regen.py
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.core.cim import (
+    POLICIES,
+    allocate,
+    profile_network,
+    resnet18_imagenet,
+    simulate,
+    vgg11_cifar10,
+)
+
+HERE = pathlib.Path(__file__).parent
+SIM_IMAGES = 64
+CONFIGS = {
+    "resnet18": (resnet18_imagenet, {"n_images": 1, "sample_patches": 128}),
+    "vgg11": (vgg11_cifar10, {"n_images": 2, "sample_patches": 128}),
+}
+
+
+def main() -> None:
+    for name, (spec_fn, prof_kw) in CONFIGS.items():
+        spec = spec_fn()
+        prof = profile_network(spec, **prof_kw)
+        results = []
+        for n_pes in (spec.min_pes() * 2, spec.min_pes() * 4):
+            for policy in POLICIES:
+                a = allocate(spec, prof, policy, n_pes)
+                s = simulate(spec, prof, a, n_images=SIM_IMAGES)
+                results.append(
+                    {
+                        "policy": policy,
+                        "n_pes": n_pes,
+                        "arrays_used": a.arrays_used,
+                        "arrays_total": a.arrays_total,
+                        "layer_dups": None
+                        if a.layer_dups is None
+                        else a.layer_dups.tolist(),
+                        "block_dups": None
+                        if a.block_dups is None
+                        else [d.tolist() for d in a.block_dups],
+                        "total_cycles": s.total_cycles,
+                        "images_per_sec": s.images_per_sec,
+                        "layer_cycles": s.layer_cycles.tolist(),
+                        "layer_utilization": s.layer_utilization.tolist(),
+                    }
+                )
+        out = HERE / f"{name}_scalar.json"
+        out.write_text(
+            json.dumps(
+                {"network": name, "profile_params": prof_kw, "results": results},
+                indent=1,
+            )
+            + "\n"
+        )
+        print(f"wrote {out} ({len(results)} pinned configs)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Error-path coverage for the CIM stack: allocate(free_budget=...)
+validation, profile_network's unknown-network guard, and the batched-engine
+input validation."""
+
+import numpy as np
+import pytest
+
+from repro.core.cim import (
+    LayerSpec,
+    NetworkSpec,
+    allocate,
+    profile_network,
+    vgg11_cifar10,
+)
+from repro.core.cim.simulate import ARRAYS_PER_PE, BatchSimulator
+from repro.dse import allocate_batch, get_profiled
+
+
+@pytest.fixture(scope="module")
+def vgg():
+    spec = vgg11_cifar10()
+    prof = profile_network(spec, n_images=1, sample_patches=32)
+    return spec, prof
+
+
+# ------------------------------------------------------ allocate(free_budget=)
+def test_free_budget_negative_raises(vgg):
+    spec, prof = vgg
+    with pytest.raises(ValueError, match="free_budget"):
+        allocate(spec, prof, "blockwise", spec.min_pes() * 2, free_budget=-1.0)
+
+
+def test_free_budget_above_free_raises(vgg):
+    spec, prof = vgg
+    n_pes = spec.min_pes() * 2
+    free = n_pes * ARRAYS_PER_PE - spec.n_arrays
+    with pytest.raises(ValueError, match="outside"):
+        allocate(spec, prof, "blockwise", n_pes, free_budget=free + 1)
+
+
+@pytest.mark.parametrize("policy", ["blockwise", "perf_layerwise", "weight_based"])
+def test_free_budget_zero_means_no_duplicates(vgg, policy):
+    spec, prof = vgg
+    a = allocate(spec, prof, policy, spec.min_pes() * 2, free_budget=0.0)
+    assert a.arrays_used == spec.n_arrays
+    dups = a.layer_dups if a.layer_dups is not None else np.concatenate(a.block_dups)
+    assert (np.asarray(dups) == 1).all()
+
+
+def test_free_budget_caps_spend(vgg):
+    spec, prof = vgg
+    n_pes = spec.min_pes() * 2
+    cap = 100.0
+    a = allocate(spec, prof, "blockwise", n_pes, free_budget=cap)
+    assert a.arrays_used <= spec.n_arrays + cap
+
+
+def test_allocate_below_minimum_raises(vgg):
+    spec, prof = vgg
+    with pytest.raises(ValueError, match="minimum"):
+        allocate(spec, prof, "blockwise", n_pes=1)
+
+
+def test_allocate_unknown_policy_raises(vgg):
+    spec, prof = vgg
+    with pytest.raises(ValueError):
+        allocate(spec, prof, "optimal", spec.min_pes() * 2)
+
+
+# -------------------------------------------------------------- profile_network
+def test_profile_unknown_network_raises():
+    spec = NetworkSpec("mystery", (LayerSpec("l0", 3, 3, 8, 8),))
+    with pytest.raises(ValueError, match="no forward plan"):
+        profile_network(spec, n_images=1, sample_patches=8)
+
+
+def test_profile_mixed_array_configs_raises():
+    layers = vgg11_cifar10().layers
+    mixed = NetworkSpec(
+        "vgg11",
+        (layers[0], *(LayerSpec(l.name, l.kernel, l.cin, l.cout, l.out_hw,
+                                l.stride, l.array.variant(adc_bits=5))
+                      for l in layers[1:])),
+    )
+    with pytest.raises(ValueError, match="array configs"):
+        profile_network(mixed, n_images=1, sample_patches=8)
+
+
+def test_get_profiled_unknown_network_raises():
+    with pytest.raises(ValueError, match="unknown network"):
+        get_profiled("alexnet")
+
+
+# ------------------------------------------------------------------ batched dse
+def test_allocate_batch_unknown_policy_raises(vgg):
+    spec, prof = vgg
+    with pytest.raises(ValueError, match="unknown policies"):
+        allocate_batch(spec, prof, ["blockwise", "optimal"], spec.min_pes() * 2)
+
+
+def test_allocate_batch_below_minimum_raises(vgg):
+    spec, prof = vgg
+    with pytest.raises(ValueError, match="minimum"):
+        allocate_batch(spec, prof, "blockwise", [spec.min_pes() * 2, 1])
+
+
+def test_batch_simulator_rejects_bad_shape(vgg):
+    spec, prof = vgg
+    sim = BatchSimulator(spec, prof)
+    with pytest.raises(ValueError, match="dups_lb"):
+        sim(np.ones((2, 3, 4)), np.ones(2, bool), np.ones(2, bool))

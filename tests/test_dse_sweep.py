@@ -1,0 +1,128 @@
+"""Sweep orchestration + Pareto extraction, and the full-scale (slow)
+batch-vs-scalar equivalence / speedup check from the acceptance criteria."""
+
+import numpy as np
+import pytest
+
+from repro.core.cim import DEFAULT_ARRAY
+from repro.dse import (
+    SweepPoint,
+    design_grid,
+    pareto_frontier,
+    pareto_mask,
+    run_sweep,
+)
+
+FAST_KW = dict(profile_images=1, sample_patches=32)
+
+
+# ------------------------------------------------------------------- pareto
+def test_pareto_mask_basic():
+    # maximize both: (2,2) dominates (1,1); (3,0)/(0,3) are corner points
+    pts = np.array([[1.0, 1.0], [2.0, 2.0], [3.0, 0.0], [0.0, 3.0]])
+    mask = pareto_mask(pts, [True, True])
+    assert mask.tolist() == [False, True, True, True]
+
+
+def test_pareto_mask_minimize_axis():
+    # minimize first axis: (1, 5) beats (2, 5); (3, 7) survives on axis 2
+    pts = np.array([[1.0, 5.0], [2.0, 5.0], [3.0, 7.0]])
+    mask = pareto_mask(pts, [False, True])
+    assert mask.tolist() == [True, False, True]
+
+
+def test_pareto_mask_duplicates_kept():
+    pts = np.array([[1.0, 1.0], [1.0, 1.0], [0.5, 0.5]])
+    mask = pareto_mask(pts, [True, True])
+    assert mask.tolist() == [True, True, False]
+
+
+def test_pareto_mask_validates():
+    with pytest.raises(ValueError, match="objectives"):
+        pareto_mask(np.zeros(3), [True])
+    with pytest.raises(ValueError, match="maximize"):
+        pareto_mask(np.zeros((3, 2)), [True])
+
+
+# -------------------------------------------------------------------- sweep
+def test_design_grid_feasible_and_cartesian():
+    arrays = (DEFAULT_ARRAY, DEFAULT_ARRAY.variant(rows=256, cols=256))
+    pts = design_grid(
+        networks=("vgg11",), pe_multipliers=(1.0, 2.0), arrays=arrays
+    )
+    assert len(pts) == 2 * 2 * 5  # arrays x multipliers x policies
+    # every point is at least the minimum design size for ITS geometry
+    from repro.core.cim import vgg11_cifar10, with_array
+
+    for p in pts:
+        spec = with_array(vgg11_cifar10(), p.array)
+        assert p.n_pes >= spec.min_pes()
+
+
+def test_run_sweep_batch_matches_scalar_small():
+    pts = design_grid(networks=("vgg11",), pe_multipliers=(1.0, 1.7, 3.0))
+    batch = run_sweep(pts, **FAST_KW)
+    scalar = run_sweep(pts, engine="scalar", **FAST_KW)
+    np.testing.assert_array_equal(batch.arrays_used, scalar.arrays_used)
+    np.testing.assert_allclose(batch.total_cycles, scalar.total_cycles, rtol=1e-9)
+    np.testing.assert_allclose(batch.images_per_sec, scalar.images_per_sec, rtol=1e-9)
+    np.testing.assert_allclose(
+        batch.mean_utilization, scalar.mean_utilization, rtol=1e-9
+    )
+    rows = batch.rows()
+    assert len(rows) == len(pts) and rows[0]["network"] == "vgg11"
+
+
+def test_run_sweep_validates_engine():
+    with pytest.raises(ValueError, match="engine"):
+        run_sweep([SweepPoint("vgg11", "blockwise", 142)], engine="gpu")
+
+
+def test_frontier_on_sweep_is_sane():
+    pts = design_grid(networks=("vgg11",), pe_multipliers=(1.0, 2.0, 4.0))
+    res = run_sweep(pts, **FAST_KW)
+    idx = pareto_frontier(res)
+    assert 0 < len(idx) <= len(pts)
+    # no frontier point may dominate another frontier point
+    vals = res.objectives(("arrays_total", "images_per_sec", "mean_utilization"))
+    assert pareto_mask(vals[idx], [False, True, True]).all()
+    # restricted to (arrays, img/s) the frontier is a monotone trade-off:
+    # more arrays must buy more throughput
+    idx2 = pareto_frontier(
+        res, objectives=(("arrays_total", False), ("images_per_sec", True))
+    )
+    order = np.argsort(res.arrays_total[idx2], kind="stable")
+    assert (np.diff(res.images_per_sec[idx2][order]) >= -1e-9).all()
+    # blockwise dominates at equal budget, so it must appear on the frontier
+    assert any(res.points[i].policy == "blockwise" for i in idx)
+
+
+# ------------------------------------------------------- acceptance (slow)
+@pytest.mark.slow
+def test_thousand_config_equivalence_and_speedup():
+    """>=1000 (policy, PE-count, array-geometry) configs: batch == scalar
+    element-wise; the batched engine is decisively faster (the >=20x
+    acceptance number is recorded by `benchmarks/run.py dse`; the test
+    asserts a conservative floor to stay robust on loaded CI machines)."""
+    arrays = (
+        DEFAULT_ARRAY,
+        DEFAULT_ARRAY.variant(adc_bits=2),
+        DEFAULT_ARRAY.variant(rows=256, cols=256),
+    )
+    pts = design_grid(
+        networks=("vgg11",),
+        pe_multipliers=tuple(np.linspace(1.0, 6.0, 67)),
+        arrays=arrays,
+    )
+    assert len(pts) >= 1000
+    kw = dict(profile_images=1, sample_patches=64)
+    run_sweep(pts, **kw)  # compile
+    batch = run_sweep(pts, **kw)
+    scalar = run_sweep(pts, engine="scalar", **kw)
+    np.testing.assert_array_equal(batch.arrays_used, scalar.arrays_used)
+    for col in ("total_cycles", "images_per_sec", "mean_utilization"):
+        np.testing.assert_allclose(
+            getattr(batch, col), getattr(scalar, col), rtol=1e-9, err_msg=col
+        )
+    speedup = scalar.elapsed_s / batch.elapsed_s
+    assert speedup > 5.0, f"batched sweep only {speedup:.1f}x faster"

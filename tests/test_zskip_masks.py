@@ -1,0 +1,84 @@
+"""zskip_matmul vs the dense reference under ARBITRARY block masks.
+
+test_kernels.py exercises masks derived from the activations (the op
+wrapper's path, where skipping is exact).  Here the mask is an independent
+input: the kernel's contract is "compute A@B with masked-off A tiles treated
+as zero", which must hold for random masks, the all-zero / all-ones edge
+cases, and non-square grids."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.zskip_matmul import zskip_matmul
+
+
+def _rand(key, m, n, dtype=jnp.float32):
+    return jax.random.normal(key, (m, n), dtype)
+
+
+@pytest.mark.parametrize(
+    "M,K,N,bm,bn,bk",
+    [
+        (128, 256, 128, 64, 64, 64),  # non-square 2x4 mask grid
+        (192, 64, 128, 64, 64, 64),  # tall 3x1 grid
+        (64, 320, 192, 64, 64, 64),  # wide 1x5 grid
+        (128, 128, 128, 128, 128, 128),  # single-tile-per-axis MXU shape
+    ],
+)
+@pytest.mark.parametrize("density", [0.0, 0.3, 0.7, 1.0])
+def test_zskip_matmul_random_masks(M, K, N, bm, bn, bk, density):
+    key = jax.random.PRNGKey(int(M + K + N + density * 100))
+    ka, kb, km = jax.random.split(key, 3)
+    a = _rand(ka, M, K)
+    b = _rand(kb, K, N)
+    mask = jax.random.bernoulli(km, density, (M // bm, K // bk)).astype(jnp.int32)
+    got = zskip_matmul(a, b, mask, bm=bm, bn=bn, bk=bk, interpret=True)
+    want = ref.zskip_matmul_ref(a, b, mask, bm, bk)
+    # full-range gaussian inputs cancel, so small outputs carry the f32
+    # accumulation-order noise — tolerance is absolute-dominated
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_zskip_all_zero_mask_is_exact_zero():
+    """Every tile skipped -> the accumulator never fires -> exact zeros."""
+    key = jax.random.PRNGKey(0)
+    a = _rand(key, 128, 256)
+    b = _rand(jax.random.fold_in(key, 1), 256, 128)
+    mask = jnp.zeros((2, 4), jnp.int32)  # (M/bm, K/bk) for bm=bk=64
+    got = zskip_matmul(a, b, mask, bm=64, bn=64, bk=64, interpret=True)
+    assert got.shape == (128, 128)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros((128, 128), np.float32))
+
+
+def test_zskip_all_ones_mask_is_dense_matmul():
+    """No tile skipped -> bit-for-bit the dense tiled matmul."""
+    key = jax.random.PRNGKey(2)
+    a = _rand(key, 128, 192)
+    b = _rand(jax.random.fold_in(key, 3), 192, 64)
+    mask = jnp.ones((2, 3), jnp.int32)
+    got = zskip_matmul(a, b, mask, bm=64, bn=64, bk=64, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(a @ b), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_zskip_mask_zeroes_live_tiles():
+    """A mask may also DROP nonzero tiles — the reference semantics are
+    'masked tile == zero tile', not 'mask == nonzero map'."""
+    a = jnp.ones((128, 128), jnp.float32)
+    b = jnp.ones((128, 64), jnp.float32)
+    mask = jnp.array([[1, 0], [0, 1]], jnp.int32)  # bm=bk=64: checkerboard
+    got = zskip_matmul(a, b, mask, bm=64, bn=64, bk=64, interpret=True)
+    # each output row sums exactly one surviving 64-wide K tile of ones
+    np.testing.assert_array_equal(np.asarray(got), np.full((128, 64), 64.0, np.float32))
+
+
+def test_zskip_rejects_unaligned_shapes():
+    a = jnp.zeros((100, 128))
+    b = jnp.zeros((128, 128))
+    mask = jnp.ones((1, 1), jnp.int32)
+    with pytest.raises(AssertionError):
+        zskip_matmul(a, b, mask, interpret=True)
