@@ -1,22 +1,45 @@
 """Benchmark harness — one function per paper table/figure plus the
 TPU-analogue and fabric-runtime benches.  Prints ``name,us_per_call,derived``
-CSV rows; ``--json out.json`` additionally writes every row + detail line as
-machine-readable JSON for perf tracking across PRs.
+CSV rows; ``--json`` additionally writes one ``BENCH_<mode>.json`` per bench
+mode at the repo root (schema: mode, config, wall_clock_s, rows, details) so
+the perf trajectory is tracked across PRs — CI uploads them as artifacts
+from the nightly job.
 
   PYTHONPATH=src python -m benchmarks.run                    # everything
   PYTHONPATH=src python -m benchmarks.run fig8 fig9          # subset
-  PYTHONPATH=src python -m benchmarks.run --json out.json fabric_tail
+  PYTHONPATH=src python -m benchmarks.run --json fabric_tail dse
 """
 
 from __future__ import annotations
 
+import pathlib
 import sys
 import time
 
 import numpy as np
 
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
 _JSON_ROWS: list[dict] = []
 _JSON_DETAILS: list[list] = []
+
+
+def _bench_config() -> dict:
+    import platform
+
+    cfg = {
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "numpy": np.__version__,
+        "argv": sys.argv[1:],
+    }
+    try:
+        import jax
+
+        cfg["jax"] = jax.__version__
+    except Exception:
+        cfg["jax"] = None
+    return cfg
 
 
 def _timeit(fn, repeats=3):
@@ -279,31 +302,79 @@ def roofline_table():
 
 # ------------------------------------------------------------ fabric runtime
 def fabric_tail():
-    """Tail latency under the same open-loop Poisson load: the paper's
-    block-wise dispatch vs the weight-based layer-wise baseline."""
+    """Tail latency across a (policy x load) grid on one fabric design:
+    the scalar event engine vs ONE batched virtual-time evaluation of all
+    (allocation, arrival-trace) pairs — the engine behind latency-aware
+    provisioning.  Asserts bit-identical per-request completion times and
+    reports the batch speedup (acceptance: >= 20x)."""
     from repro.core.cim import allocate, simulate
     from repro.core.cim.simulate import CLOCK_HZ
-    from repro.fabric import FabricSim, PoissonOpen
+    from repro.fabric import (
+        FabricSim,
+        PoissonOpen,
+        VirtualTimeFabric,
+        provision_latency_aware,
+    )
 
     spec, prof = _profile("vgg11")
     pes = spec.min_pes() * 2
     wb = allocate(spec, prof, "weight_based", pes)
     bw = allocate(spec, prof, "blockwise", pes)
-    cap_wb = simulate(spec, prof, wb, n_images=64).images_per_sec
-    proc = PoissonOpen(n_requests=400, rate_per_cycle=0.7 * cap_wb / CLOCK_HZ, seed=5)
+    cap = simulate(spec, prof, bw, n_images=64).images_per_sec
+    loads = (0.3, 0.5, 0.6, 0.7, 0.85)
+    n_req = 400
+    allocs, procs, labels = [], [], []
+    vt_prov = VirtualTimeFabric(spec, prof, lane_quantum=8)  # shared warm cache
+    for f in loads:
+        la = provision_latency_aware(
+            spec, prof, pes, offered_ips=f * cap, calib_requests=150, grants=0,
+            vt=vt_prov,
+        )
+        proc = PoissonOpen(n_requests=n_req, rate_per_cycle=f * cap / CLOCK_HZ, seed=5)
+        for pol, a in (("weight_based", wb), ("blockwise", bw), ("latency_aware", la)):
+            allocs.append(a)
+            procs.append(proc)
+            labels.append((pol, f))
+
     t0 = time.perf_counter()
-    r_wb = FabricSim(spec, prof, wb, seed=3).run(proc)
-    r_bw = FabricSim(spec, prof, bw, seed=3).run(proc)
-    us = (time.perf_counter() - t0) * 1e6
-    l_wb, l_bw = r_wb.latency_ms(), r_bw.latency_ms()
-    _row(
-        "fabric_tail_vgg11_poisson70",
-        us,
-        f"p99 {l_wb.p99:.3f}ms->{l_bw.p99:.3f}ms ({l_wb.p99/l_bw.p99:.2f}x);"
-        f"p50 {l_wb.p50:.3f}ms->{l_bw.p50:.3f}ms",
+    scalar = [
+        FabricSim(spec, prof, a, seed=3).run(p) for a, p in zip(allocs, procs)
+    ]
+    t_scalar = time.perf_counter() - t0
+
+    vt = VirtualTimeFabric(spec, prof)
+    t0 = time.perf_counter()
+    vt.run_batch(allocs, procs, seed=3)
+    t_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res = vt.run_batch(allocs, procs, seed=3)
+    t_warm = time.perf_counter() - t0
+
+    bitident = all(
+        np.array_equal(res.completions[i], r.completions)
+        and np.array_equal(res.arrivals[i], r.arrivals)
+        for i, r in enumerate(scalar)
     )
-    for name, st in (("weight_based", l_wb), ("blockwise", l_bw)):
-        _detail("fabric_tail", name, f"{st.p50:.4f}", f"{st.p95:.4f}", f"{st.p99:.4f}", f"{st.mean:.4f}")
+    # hard acceptance: the batched kernel must BE the event engine
+    assert bitident, "virtual-time batch diverged from the scalar event engine"
+    ms = 1e3 / CLOCK_HZ
+    p99 = {lab: res.latency(i).p99 * ms for i, lab in enumerate(labels)}
+    f0 = 0.7
+    _row(
+        f"fabric_tail_vgg11_{len(allocs)}cfg",
+        t_warm * 1e6,
+        f"speedup={t_scalar / t_warm:.1f}x;scalar_s={t_scalar:.2f};"
+        f"batch_cold_s={t_cold:.2f};bitident={bitident};"
+        f"p99@70% wb={p99[('weight_based', f0)]:.3f}ms "
+        f"bw={p99[('blockwise', f0)]:.3f}ms "
+        f"la={p99[('latency_aware', f0)]:.3f}ms",
+    )
+    for i, (pol, f) in enumerate(labels):
+        st = res.latency(i)
+        _detail(
+            "fabric_tail", pol, f, f"{st.p50 * ms:.4f}", f"{st.p95 * ms:.4f}",
+            f"{st.p99 * ms:.4f}", f"{st.mean * ms:.4f}",
+        )
 
 
 def fabric_drift():
@@ -454,31 +525,37 @@ ALL = {
 
 def main() -> None:
     args = sys.argv[1:]
-    json_path = None
-    if "--json" in args:
-        i = args.index("--json")
-        try:
-            json_path = args[i + 1]
-        except IndexError:
-            raise SystemExit("--json needs an output path")
-        args = args[:i] + args[i + 2 :]
+    write_json = "--json" in args
+    if write_json:
+        args = [a for a in args if a != "--json"]
     names = args or list(ALL)
     unknown = [n for n in names if n not in ALL]
     if unknown:
         raise SystemExit(f"unknown bench(es) {unknown}; choose from {list(ALL)}")
     print("name,us_per_call,derived")
+    config = _bench_config()
     for n in names:
+        r0, d0 = len(_JSON_ROWS), len(_JSON_DETAILS)
+        t0 = time.perf_counter()
         ALL[n]()
-    if json_path:
-        import json
+        wall = time.perf_counter() - t0
+        if write_json:
+            import json
 
-        with open(json_path, "w") as f:
-            json.dump(
-                {"benches": names, "rows": _JSON_ROWS, "details": _JSON_DETAILS},
-                f,
-                indent=2,
-            )
-        print(f"# wrote {json_path}", file=sys.stderr)
+            path = REPO_ROOT / f"BENCH_{n}.json"
+            with open(path, "w") as f:
+                json.dump(
+                    {
+                        "mode": n,
+                        "config": config,
+                        "wall_clock_s": round(wall, 3),
+                        "rows": _JSON_ROWS[r0:],
+                        "details": _JSON_DETAILS[d0:],
+                    },
+                    f,
+                    indent=2,
+                )
+            print(f"# wrote {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -50,13 +50,14 @@ from typing import Literal
 
 import numpy as np
 
-from ..alloc.greedy import greedy_allocate, proportional_allocate
+from ..alloc.greedy import greedy_allocate, proportional_allocate, queueing_allocate
 from .network import NetworkSpec
 from .profile import NetworkProfile
 
 __all__ = [
     "Policy",
     "POLICIES",
+    "ALL_POLICIES",
     "Allocation",
     "SimResult",
     "SimTensors",
@@ -78,7 +79,13 @@ Policy = Literal[
     # ablation: weight-based ALLOCATION but block-wise DATAFLOW — separates
     # the paper's two contributions (the paper reports them fused)
     "weight_blockflow",
+    # serving extension: replicas by marginal queueing-delay reduction at a
+    # target offered load (block-wise dataflow; see alloc.greedy
+    # .queueing_allocate and fabric.vtime.refine_latency_aware)
+    "latency_aware",
 ]
+# the paper's Figure-8 policies — sweeps default to these; "latency_aware"
+# additionally needs an offered load, so it joins sweeps explicitly
 POLICIES: tuple[Policy, ...] = (
     "baseline",
     "weight_based",
@@ -86,6 +93,7 @@ POLICIES: tuple[Policy, ...] = (
     "blockwise",
     "weight_blockflow",
 )
+ALL_POLICIES: tuple[Policy, ...] = POLICIES + ("latency_aware",)
 ARRAYS_PER_PE = 64
 CLOCK_HZ = 100e6
 
@@ -160,10 +168,17 @@ def allocate(
     n_pes: int,
     arrays_per_pe: int = ARRAYS_PER_PE,
     free_budget: float | None = None,
+    offered_ips: float | None = None,
+    load_frac: float = 0.7,
 ) -> Allocation:
     """Pick replica counts.  ``free_budget`` caps the arrays spent on extra
     replicas below the physical ``total - base`` (used to hold back a reserve
-    pool for online re-allocation)."""
+    pool for online re-allocation).
+
+    The ``latency_aware`` policy additionally needs a target offered load:
+    ``offered_ips`` (images/sec), or — when omitted — ``load_frac`` times
+    the analytic throughput of the ``blockwise`` allocation at the same
+    budget (the natural "provision for X% of peak" operating point)."""
     total = n_pes * arrays_per_pe
     base_arrays = spec.n_arrays
     if total < base_arrays:
@@ -208,6 +223,40 @@ def allocate(
         res = greedy_allocate(base_lat, cost, free)
         block_dups = split_block_dups(spec, res.replicas)
         used = int(base_arrays + ((res.replicas - 1) * cost).sum())
+        return Allocation(policy, None, block_dups, used, total)
+
+    if policy == "latency_aware":
+        if offered_ips is None:
+            bw = allocate(spec, prof, "blockwise", n_pes, arrays_per_pe, free_budget)
+            offered_ips = load_frac * simulate(spec, prof, bw).images_per_sec
+        if offered_ips <= 0:
+            raise ValueError(f"offered_ips must be positive, got {offered_ips}")
+        r_cyc = float(offered_ips) / CLOCK_HZ  # images per fabric cycle
+        # per-block FIFO pools: every patch of layer l brings one job to
+        # each of its blocks, so the pool's job rate is r * patches/image,
+        # arriving in request-batches of patches_per_image; a layer (= one
+        # pipeline stage) is a group — its latency is its slowest pool's
+        mean, scv, job_rate, cost, batch, group = [], [], [], [], [], []
+        for i, layer in enumerate(spec.layers):
+            m = cyc[i].mean(axis=0)
+            v = cyc[i].var(axis=0)
+            mean.append(m)
+            scv.append(v / np.maximum(m, 1e-300) ** 2)
+            job_rate.append(np.full(layer.n_blocks, r_cyc * layer.patches_per_image))
+            cost.append(np.full(layer.n_blocks, float(layer.arrays_per_block)))
+            batch.append(np.full(layer.n_blocks, float(layer.patches_per_image)))
+            group.append(np.full(layer.n_blocks, i, dtype=np.int64))
+        res = queueing_allocate(
+            np.concatenate(job_rate),
+            np.concatenate(mean),
+            np.concatenate(scv),
+            np.concatenate(cost),
+            free,
+            batch_size=np.concatenate(batch),
+            group=np.concatenate(group),
+        )
+        block_dups = split_block_dups(spec, res.replicas)
+        used = int(base_arrays + ((res.replicas - 1) * np.concatenate(cost)).sum())
         return Allocation(policy, None, block_dups, used, total)
 
     raise ValueError(policy)

@@ -3,12 +3,22 @@
 The paper reports one design point; this package sweeps thousands —
 (array geometry, ADC precision, PE budget, allocation policy, network) —
 through the batched float64 allocate/simulate kernels and extracts the
-arrays-vs-throughput-vs-utilization Pareto frontier.
+arrays-vs-throughput-vs-utilization Pareto frontier.  With a ``FabricEval``
+attached, every swept design additionally runs the batched virtual-time
+fabric at its own operating load, so frontiers can rank on
+(throughput, p99 tail latency, utilization) instead of throughput alone
+(``LATENCY_OBJECTIVES``).
 """
 
 from .engine import AllocationBatch, allocate_batch, run_batch, to_allocation
-from .pareto import DEFAULT_OBJECTIVES, pareto_frontier, pareto_mask
+from .pareto import (
+    DEFAULT_OBJECTIVES,
+    LATENCY_OBJECTIVES,
+    pareto_frontier,
+    pareto_mask,
+)
 from .sweep import (
+    FabricEval,
     SweepPoint,
     SweepResult,
     clear_caches,
@@ -23,8 +33,10 @@ __all__ = [
     "run_batch",
     "to_allocation",
     "DEFAULT_OBJECTIVES",
+    "LATENCY_OBJECTIVES",
     "pareto_frontier",
     "pareto_mask",
+    "FabricEval",
     "SweepPoint",
     "SweepResult",
     "clear_caches",

@@ -21,13 +21,14 @@ from ..core.alloc.greedy import greedy_allocate_batch, proportional_allocate_bat
 from ..core.cim.network import NetworkSpec
 from ..core.cim.profile import NetworkProfile
 from ..core.cim.simulate import (
+    ALL_POLICIES,
     ARRAYS_PER_PE,
     CLOCK_HZ,
-    POLICIES,
     Allocation,
     BatchSimResult,
     BatchSimulator,
     _layer_patch_cycles,
+    allocate,
     blockwise_units,
 )
 
@@ -59,14 +60,21 @@ def allocate_batch(
     policies,
     n_pes,
     arrays_per_pe: int = ARRAYS_PER_PE,
+    latency_load_frac: float = 0.7,
 ) -> AllocationBatch:
-    """Batched ``allocate``: one call for a whole (policy, PE-count) sweep."""
+    """Batched ``allocate``: one call for a whole (policy, PE-count) sweep.
+
+    ``latency_aware`` points are supported but allocate through the scalar
+    path per config (the queueing greedy is load-dependent and not
+    lock-steppable); their offered load is ``latency_load_frac`` times the
+    scalar blockwise throughput at the same budget, matching the scalar
+    ``allocate`` default."""
     policies = np.atleast_1d(np.asarray(policies, dtype=object))
     n_pes = np.atleast_1d(np.asarray(n_pes, dtype=np.int64))
     policies, n_pes = np.broadcast_arrays(policies, n_pes)
-    unknown = sorted({p for p in policies if p not in POLICIES})
+    unknown = sorted({p for p in policies if p not in ALL_POLICIES})
     if unknown:
-        raise ValueError(f"unknown policies {unknown}; choose from {POLICIES}")
+        raise ValueError(f"unknown policies {unknown}; choose from {ALL_POLICIES}")
     C = policies.shape[0]
     total = n_pes * arrays_per_pe
     base_arrays = spec.n_arrays
@@ -109,6 +117,15 @@ def allocate_batch(
             np.int64
         )
 
+    for i in np.flatnonzero(policies == "latency_aware"):
+        a = allocate(
+            spec, prof, "latency_aware", int(n_pes[i]), arrays_per_pe,
+            load_frac=latency_load_frac,
+        )
+        for li, d in enumerate(a.block_dups):
+            dups_lb[i, li, : d.size] = d.astype(np.float64)
+        used[i] = a.arrays_used
+
     return AllocationBatch(
         policies=policies.astype(str),
         n_pes=n_pes.copy(),
@@ -145,9 +162,12 @@ def run_batch(
     clock_hz: float = CLOCK_HZ,
     arrays_per_pe: int = ARRAYS_PER_PE,
     simulator: BatchSimulator | None = None,
+    latency_load_frac: float = 0.7,
 ) -> tuple[AllocationBatch, BatchSimResult]:
     """allocate_batch + BatchSimulator in one call."""
-    alloc = allocate_batch(spec, prof, policies, n_pes, arrays_per_pe)
+    alloc = allocate_batch(
+        spec, prof, policies, n_pes, arrays_per_pe, latency_load_frac
+    )
     sim = simulator if simulator is not None else BatchSimulator(spec, prof)
     res = sim(alloc.dups_lb, alloc.layerwise, alloc.zskip, n_images, clock_hz)
     return alloc, res

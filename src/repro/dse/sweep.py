@@ -23,14 +23,16 @@ from ..core.cim.network import NetworkSpec, resnet18_imagenet, vgg11_cifar10, wi
 from ..core.cim.profile import NetworkProfile, profile_network
 from ..core.cim.simulate import (
     ARRAYS_PER_PE,
+    CLOCK_HZ,
     POLICIES,
     BatchSimulator,
     allocate,
     simulate,
 )
-from .engine import run_batch
+from .engine import run_batch, to_allocation
 
 __all__ = [
+    "FabricEval",
     "SweepPoint",
     "SweepResult",
     "design_grid",
@@ -42,6 +44,7 @@ __all__ = [
 _SPEC_FNS = {"resnet18": resnet18_imagenet, "vgg11": vgg11_cifar10}
 _PROFILE_CACHE: dict[tuple, tuple[NetworkSpec, NetworkProfile]] = {}
 _SIMULATOR_CACHE: dict[tuple, BatchSimulator] = {}
+_VT_CACHE: dict[tuple, object] = {}  # VirtualTimeFabric per profiled group
 
 
 @dataclass(frozen=True)
@@ -54,9 +57,31 @@ class SweepPoint:
     array: ArrayConfig = DEFAULT_ARRAY
 
 
+@dataclass(frozen=True)
+class FabricEval:
+    """Optional serving-side evaluation attached to a sweep.
+
+    Every design point additionally runs the batched virtual-time fabric
+    under open-loop Poisson traffic at ``load_frac`` of its own analytic
+    throughput, filling the sweep's latency-percentile columns so designs
+    can be ranked / Pareto-filtered on (throughput, p99, utilization).
+    Traces share one normalized gap sequence (common random numbers), so
+    latency differences across designs are allocation effects, not trace
+    noise.
+    """
+
+    load_frac: float = 0.7
+    n_requests: int = 200
+    seed: int = 0
+
+
 @dataclass
 class SweepResult:
-    """Columnar sweep outcome; row i corresponds to ``points[i]``."""
+    """Columnar sweep outcome; row i corresponds to ``points[i]``.
+
+    The latency columns (``p50_cycles``/``p95_cycles``/``p99_cycles``) are
+    NaN unless the sweep ran with a ``FabricEval``.
+    """
 
     points: list[SweepPoint]
     total_cycles: np.ndarray
@@ -66,13 +91,18 @@ class SweepResult:
     arrays_total: np.ndarray
     elapsed_s: float
     engine: str
+    p50_cycles: np.ndarray | None = None
+    p95_cycles: np.ndarray | None = None
+    p99_cycles: np.ndarray | None = None
+    fabric: FabricEval | None = None
 
     def __len__(self) -> int:
         return len(self.points)
 
     def rows(self) -> list[dict]:
-        return [
-            {
+        out = []
+        for i, p in enumerate(self.points):
+            row = {
                 "network": p.network,
                 "policy": p.policy,
                 "n_pes": p.n_pes,
@@ -84,12 +114,25 @@ class SweepResult:
                 "arrays_used": int(self.arrays_used[i]),
                 "arrays_total": int(self.arrays_total[i]),
             }
-            for i, p in enumerate(self.points)
-        ]
+            if self.p99_cycles is not None:
+                row["p50_ms"] = float(self.p50_cycles[i] / CLOCK_HZ * 1e3)
+                row["p95_ms"] = float(self.p95_cycles[i] / CLOCK_HZ * 1e3)
+                row["p99_ms"] = float(self.p99_cycles[i] / CLOCK_HZ * 1e3)
+            out.append(row)
+        return out
 
     def objectives(self, names: tuple[str, ...]) -> np.ndarray:
         """(C, len(names)) matrix of the named columns (pareto input)."""
-        return np.stack([np.asarray(getattr(self, n), dtype=np.float64) for n in names], axis=1)
+        cols = []
+        for n in names:
+            v = getattr(self, n)
+            if v is None:
+                raise ValueError(
+                    f"column {n!r} was not computed — run the sweep with a "
+                    f"FabricEval to fill latency percentiles"
+                )
+            cols.append(np.asarray(v, dtype=np.float64))
+        return np.stack(cols, axis=1)
 
 
 def _spec_for(network: str, array: ArrayConfig) -> NetworkSpec:
@@ -121,6 +164,7 @@ def get_profiled(
 def clear_caches() -> None:
     _PROFILE_CACHE.clear()
     _SIMULATOR_CACHE.clear()
+    _VT_CACHE.clear()
 
 
 def design_grid(
@@ -153,10 +197,25 @@ def run_sweep(
     seed: int = 0,
     arrays_per_pe: int = ARRAYS_PER_PE,
     engine: str = "batch",
+    fabric: FabricEval | None = None,
+    latency_load_frac: float | None = None,
 ) -> SweepResult:
-    """Evaluate every point; profiles are cached and excluded from timing."""
+    """Evaluate every point; profiles are cached and excluded from timing.
+
+    With ``fabric=FabricEval(...)`` every point additionally runs the
+    virtual-time fabric at ``load_frac`` of its own analytic throughput —
+    one batched call per (network, array) group on the batch engine, one
+    ``FabricSim`` event-engine run per point on the scalar engine (the
+    equivalence reference) — filling the p50/p95/p99 columns.
+
+    ``latency_load_frac`` is the offered load ``latency_aware`` design
+    points are *provisioned* for; it defaults to the load they are
+    *evaluated* at (``fabric.load_frac``, else 0.7) so the two knobs cannot
+    silently disagree."""
     if engine not in ("batch", "scalar"):
         raise ValueError(f"engine must be 'batch' or 'scalar', got {engine!r}")
+    if latency_load_frac is None:
+        latency_load_frac = fabric.load_frac if fabric is not None else 0.7
     C = len(points)
     out = {
         name: np.zeros(C)
@@ -164,6 +223,7 @@ def run_sweep(
     }
     used = np.zeros(C, dtype=np.int64)
     total = np.zeros(C, dtype=np.int64)
+    pcts = np.full((C, 3), np.nan) if fabric is not None else None
 
     # group rows by (network, array) — one packed profile per group
     groups: dict[tuple, list[int]] = {}
@@ -182,6 +242,7 @@ def run_sweep(
         pols = np.array([points[i].policy for i in rows], dtype=object)
         pes = np.array([points[i].n_pes for i in rows], dtype=np.int64)
         t0 = time.perf_counter()
+        allocs = None
         if engine == "batch":
             key = (net, arr, profile_images, sample_patches, seed)
             if key not in _SIMULATOR_CACHE:
@@ -194,22 +255,35 @@ def run_sweep(
                 n_images=n_images,
                 arrays_per_pe=arrays_per_pe,
                 simulator=_SIMULATOR_CACHE[key],
+                latency_load_frac=latency_load_frac,
             )
             out["total_cycles"][idx] = res.total_cycles
             out["images_per_sec"][idx] = res.images_per_sec
             out["mean_utilization"][idx] = res.mean_utilization
             used[idx] = alloc.arrays_used
             total[idx] = alloc.arrays_total
+            if fabric is not None:
+                allocs = [to_allocation(alloc, k, spec) for k in range(len(rows))]
         else:
+            allocs = []
             for i in rows:
                 p = points[i]
-                a = allocate(spec, prof, p.policy, p.n_pes, arrays_per_pe)
+                a = allocate(
+                    spec, prof, p.policy, p.n_pes, arrays_per_pe,
+                    load_frac=latency_load_frac,
+                )
                 s = simulate(spec, prof, a, n_images=n_images)
                 out["total_cycles"][i] = s.total_cycles
                 out["images_per_sec"][i] = s.images_per_sec
                 out["mean_utilization"][i] = s.mean_utilization
                 used[i] = a.arrays_used
                 total[i] = a.arrays_total
+                allocs.append(a)
+        if fabric is not None:
+            pcts[idx] = _fabric_eval(
+                spec, prof, allocs, out["images_per_sec"][idx], fabric, engine,
+                cache_key=(net, arr, profile_images, sample_patches, seed),
+            )
         elapsed += time.perf_counter() - t0
 
     return SweepResult(
@@ -221,4 +295,48 @@ def run_sweep(
         arrays_total=total,
         elapsed_s=elapsed,
         engine=engine,
+        p50_cycles=pcts[:, 0] if fabric is not None else None,
+        p95_cycles=pcts[:, 1] if fabric is not None else None,
+        p99_cycles=pcts[:, 2] if fabric is not None else None,
+        fabric=fabric,
     )
+
+
+def _fabric_eval(
+    spec, prof, allocs, ips, fabric: FabricEval, engine: str, cache_key=None
+) -> np.ndarray:
+    """(C, 3) p50/p95/p99 in cycles for one sweep group.
+
+    Each design gets a Poisson trace at ``load_frac`` of its own analytic
+    throughput, built from one shared normalized gap sequence; the batch
+    engine evaluates the whole group per virtual-time call, the scalar
+    engine runs the event-driven ``FabricSim`` per point (bit-identical by
+    construction — the equivalence suite pins this).
+    """
+    from ..fabric.arrivals import TraceReplay
+    from ..fabric.dispatch import FabricSim
+    from ..fabric.vtime import VirtualTimeFabric
+
+    rng = np.random.default_rng(fabric.seed)
+    gaps = rng.exponential(1.0, size=fabric.n_requests)
+    rates = fabric.load_frac * np.asarray(ips, dtype=np.float64) / CLOCK_HZ
+    procs = [TraceReplay(np.cumsum(gaps) / r) for r in rates]
+    qs = (50.0, 95.0, 99.0)
+    if engine == "batch":
+        # cached like _SIMULATOR_CACHE so repeated sweeps over the same
+        # (network, array, profile) group reuse the compiled kernels
+        if cache_key is not None and cache_key in _VT_CACHE:
+            vt = _VT_CACHE[cache_key]
+        else:
+            vt = VirtualTimeFabric(spec, prof)
+            if cache_key is not None:
+                _VT_CACHE[cache_key] = vt
+        res = vt.run_batch(allocs, procs, seed=fabric.seed, percentiles=qs)
+        # percentiles recomputed in numpy from the bit-exact latencies so the
+        # batch and scalar sweep columns agree to the last bit
+        return np.percentile(res.latencies, qs, axis=1).T
+    out = np.zeros((len(allocs), 3))
+    for k, (a, pr) in enumerate(zip(allocs, procs)):
+        r = FabricSim(spec, prof, a, seed=fabric.seed).run(pr)
+        out[k] = np.percentile(r.latencies, qs)
+    return out

@@ -8,6 +8,12 @@ arrivals, behavior when the live input distribution drifts off the profile
 one fabric.  It executes the same ``NetworkSpec`` / ``NetworkProfile`` /
 ``Allocation`` objects as the analytic model and agrees with it in the
 closed-loop steady state (asserted in tests).
+
+Two equivalent engines: the event calendar (``FabricSim``, scalar, supports
+drift re-allocation and timelines) and the packed virtual-time kernel
+(``VirtualTimeFabric``, jit+vmap over batches of (allocation, trace) pairs,
+bit-identical to the event engine) — the latter powers latency-aware
+provisioning (``provision_latency_aware``) and the DSE latency columns.
 """
 
 from .arrivals import ClosedLoop, PoissonOpen, TraceReplay, arrival_times
@@ -27,6 +33,13 @@ from .tenancy import (
     allocate_shared,
     fairness_report,
     run_tenants,
+)
+from .vtime import (
+    VTResult,
+    VirtualTimeFabric,
+    provision_latency_aware,
+    refine_latency_aware,
+    sample_service_indices,
 )
 
 __all__ = [
@@ -50,4 +63,9 @@ __all__ = [
     "allocate_shared",
     "fairness_report",
     "run_tenants",
+    "VTResult",
+    "VirtualTimeFabric",
+    "provision_latency_aware",
+    "refine_latency_aware",
+    "sample_service_indices",
 ]

@@ -50,16 +50,34 @@ ArrivalProcess = ClosedLoop | PoissonOpen | TraceReplay
 def arrival_times(proc: ArrivalProcess) -> np.ndarray | None:
     """Explicit arrival times for open-loop processes; None for closed-loop
     (closed-loop admissions depend on completions and are resolved by the
-    engine)."""
+    engine).
+
+    Edge cases are part of the contract: an empty trace is a legal zero-
+    request workload; duplicate timestamps (simultaneous arrivals, recorded
+    bursts) are legal and dispatch in request order; a time running
+    *backwards* is a data error and is rejected with the first offending
+    position.
+    """
     if isinstance(proc, ClosedLoop):
         return None
     if isinstance(proc, PoissonOpen):
+        if not proc.rate_per_cycle > 0:
+            raise ValueError(
+                f"PoissonOpen rate_per_cycle must be positive, got {proc.rate_per_cycle}"
+            )
         rng = np.random.default_rng(proc.seed)
         gaps = rng.exponential(1.0 / proc.rate_per_cycle, size=proc.n_requests)
         return np.cumsum(gaps)
     if isinstance(proc, TraceReplay):
         t = np.asarray(proc.times, dtype=np.float64)
-        if np.any(np.diff(t) < 0):
-            raise ValueError("trace times must be nondecreasing")
+        if t.ndim != 1:
+            raise ValueError(f"trace times must be 1-D, got shape {t.shape}")
+        bad = np.flatnonzero(np.diff(t) < 0)
+        if bad.size:
+            i = int(bad[0]) + 1
+            raise ValueError(
+                f"trace times must be nondecreasing: times[{bad[0]}]={t[bad[0]]} "
+                f"> times[index {i}]={t[i]}"
+            )
         return t
     raise TypeError(f"unknown arrival process {proc!r}")

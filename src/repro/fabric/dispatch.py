@@ -19,7 +19,9 @@ steady-state throughput of a saturated closed loop converges to the analytic
 Per-patch service times are drawn (with replacement) from the profiled
 per-(patch, block) cycle sample — or, for drift studies, from a second
 "live" profile that the dispatcher samples while the monitor still expects
-the original one.
+the original one.  Draws are presampled request-major at the start of a run
+(``vtime.sample_service_indices``), so the virtual-time engines consume
+identical randomness and reproduce this engine bit for bit.
 """
 
 from __future__ import annotations
@@ -34,6 +36,7 @@ from ..core.cim.simulate import Allocation, CLOCK_HZ, _layer_patch_cycles
 from .arrivals import ArrivalProcess, ClosedLoop, arrival_times
 from .events import EventCalendar, ServerPool
 from .metrics import FabricResult
+from .vtime import sample_service_indices
 
 __all__ = ["FabricSim"]
 
@@ -104,9 +107,9 @@ class FabricSim:
             reallocator.bind(self)
 
     # ------------------------------------------------------------- internals
-    def _dispatch_stage(self, stage_idx: int, t: float) -> float:
+    def _dispatch_stage(self, stage_idx: int, t: float, req: int) -> float:
         st = self.stages[stage_idx]
-        idx = self.rng.integers(0, st.services.shape[0], st.ppi)
+        idx = self._svc_idx[stage_idx][req]
         svc = st.services[idx]
         if not st.blockwise:
             st.busy += float(st.busy_sample[idx].sum())
@@ -147,6 +150,13 @@ class FabricSim:
         cal = EventCalendar()
         times = arrival_times(proc)
         n = proc.n_requests if times is None else times.size
+        # request-major presampling (layer-major draw order): the same
+        # helper, seed and order the virtual-time paths use, so per-request
+        # service times are identical across engines regardless of the
+        # calendar's interleaving
+        self._svc_idx = sample_service_indices(
+            self.rng, [(st.services.shape[0], st.ppi) for st in self.stages], n
+        )
         arrivals = np.zeros(n)
         completions = np.zeros(n)
         next_admit = 0
@@ -169,7 +179,7 @@ class FabricSim:
                     cal.push(t, next_admit, 0)
                     next_admit += 1
                 continue
-            done = self._dispatch_stage(s, t)
+            done = self._dispatch_stage(s, t, r)
             cal.push(done, r, s + 1)
 
         layer_busy = np.array(

@@ -19,7 +19,10 @@ scale (~1.3e5 patch-block jobs per image):
     time order), so per-pool FIFO order is preserved across requests.
 
 Single-server pools (the common case at small designs) vectorize to a
-cumulative sum; multi-server pools run a heap of server free-times.
+cumulative sum; multi-server pools scan server free-times with a
+deterministic earliest-free / lowest-index rule.  Both are bit-identical to
+the packed virtual-time kernel in ``vtime.py`` (asserted in tests), which is
+the same logic as dense array algebra under ``jit``+``vmap``.
 """
 
 from __future__ import annotations
@@ -30,6 +33,16 @@ from dataclasses import dataclass, field
 import numpy as np
 
 __all__ = ["ServerPool", "EventCalendar"]
+
+
+def _earliest_free(avail: list[float]) -> int:
+    """Earliest-free server, ties -> lowest index.
+
+    The deterministic tie-break (rather than heap order) keeps the pool's
+    evolution a pure function of the free-time *multiset*, which is what the
+    packed virtual-time kernel (``vtime.dispatch_step``, sorted lanes)
+    simulates — so the two engines agree bit-for-bit."""
+    return min(range(len(avail)), key=avail.__getitem__)
 
 
 class ServerPool:
@@ -82,38 +95,41 @@ class ServerPool:
         self.jobs += m
         if len(self.avail) == 1:
             start0 = self.avail[0] if self.avail[0] > t_ready else t_ready
-            ends = start0 + np.cumsum(s)
+            # cumsum over [start0, s...] accumulates left-to-right, the same
+            # op order as the per-job recurrence — bit-identical to vtime's
+            # step scan (a plain `start0 + cumsum(s)` would round differently)
+            ends = np.cumsum(np.concatenate(((start0,), s)))[1:]
             if self.record_starts:
-                self.starts.append(ends - s)
+                self.starts.append(np.concatenate(((start0,), ends[:-1])))
                 self.durations.append(s)
             self.avail[0] = float(ends[-1])
             return self.avail[0]
-        heap = self.avail
-        heapq.heapify(heap)
-        push, pop = heapq.heappush, heapq.heappop
+        avail = self.avail
         last = 0.0
         if self.record_starts:
             st = np.empty(m)
             for j, sv in enumerate(s.tolist()):
-                a = pop(heap)
+                i = _earliest_free(avail)
+                a = avail[i]
                 if a < t_ready:
                     a = t_ready
                 st[j] = a
                 e = a + sv
                 if e > last:
                     last = e
-                push(heap, e)
+                avail[i] = e
             self.starts.append(st)
             self.durations.append(s)
         else:
             for sv in s.tolist():
-                a = pop(heap)
+                i = _earliest_free(avail)
+                a = avail[i]
                 if a < t_ready:
                     a = t_ready
                 e = a + sv
                 if e > last:
                     last = e
-                push(heap, e)
+                avail[i] = e
         return last
 
     def grow(self, extra: int, t_free: float) -> None:

@@ -1,0 +1,49 @@
+"""`benchmarks/run.py --json` writes one BENCH_<mode>.json per mode at the
+repo root — the machine-readable perf trajectory CI uploads nightly."""
+
+import json
+import pathlib
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_bench_json_schema(tmp_path):
+    out = REPO / "BENCH_stage_balance.json"
+    existing = out.read_text() if out.exists() else None
+    try:
+        r = subprocess.run(
+            [sys.executable, "-m", "benchmarks.run", "--json", "stage_balance"],
+            cwd=REPO,
+            env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin:/usr/local/bin"},
+            capture_output=True,
+            text=True,
+            timeout=300,
+        )
+        assert r.returncode == 0, r.stderr
+        assert out.exists()
+        doc = json.loads(out.read_text())
+        assert doc["mode"] == "stage_balance"
+        assert doc["wall_clock_s"] >= 0
+        assert {"python", "numpy", "jax", "platform", "argv"} <= set(doc["config"])
+        assert doc["rows"] and doc["rows"][0]["name"].startswith("stage_balance")
+        assert "us_per_call" in doc["rows"][0] and "derived" in doc["rows"][0]
+    finally:
+        if existing is not None:
+            out.write_text(existing)
+        elif out.exists():
+            out.unlink()
+
+
+def test_bench_rejects_unknown_mode():
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "no_such_bench"],
+        cwd=REPO,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        capture_output=True,
+        text=True,
+        timeout=120,
+    )
+    assert r.returncode != 0
+    assert "no_such_bench" in r.stderr

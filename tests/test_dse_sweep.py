@@ -78,6 +78,46 @@ def test_run_sweep_validates_engine():
         run_sweep([SweepPoint("vgg11", "blockwise", 142)], engine="gpu")
 
 
+def test_fabric_eval_fills_latency_columns_bit_equal():
+    """With a FabricEval, both engines fill p50/p95/p99 — the batched
+    virtual-time path and the scalar event engine to the last bit — and the
+    serving frontier (throughput, p99, utilization) becomes available."""
+    from repro.dse import FabricEval, LATENCY_OBJECTIVES
+
+    pts = design_grid(
+        networks=("vgg11",),
+        policies=("weight_based", "blockwise", "latency_aware"),
+        pe_multipliers=(1.7, 2.4),
+    )
+    fe = FabricEval(load_frac=0.6, n_requests=60, seed=0)
+    batch = run_sweep(pts, fabric=fe, **FAST_KW)
+    scalar = run_sweep(pts, fabric=fe, engine="scalar", **FAST_KW)
+    np.testing.assert_array_equal(batch.arrays_used, scalar.arrays_used)
+    for col in ("p50_cycles", "p95_cycles", "p99_cycles"):
+        b, s = getattr(batch, col), getattr(scalar, col)
+        assert np.all(np.isfinite(b))
+        np.testing.assert_array_equal(b, s)
+    assert np.all(batch.p99_cycles >= batch.p95_cycles)
+    assert np.all(batch.p95_cycles >= batch.p50_cycles)
+    assert "p99_ms" in batch.rows()[0]
+    idx = pareto_frontier(batch, LATENCY_OBJECTIVES)
+    assert 0 < len(idx) <= len(pts)
+    # the layer-wise weight_based designs have strictly worse tails than
+    # block-wise designs at the same budget (the PR-1 acceptance, now a
+    # first-class sweep column)
+    wb = [i for i, p in enumerate(batch.points) if p.policy == "weight_based"]
+    bw = [i for i, p in enumerate(batch.points) if p.policy == "blockwise"]
+    assert np.all(batch.p99_cycles[wb] > batch.p99_cycles[bw])
+
+
+def test_fabric_columns_absent_without_fabric_eval():
+    pts = design_grid(networks=("vgg11",), pe_multipliers=(1.7,))
+    res = run_sweep(pts, **FAST_KW)
+    assert res.p99_cycles is None
+    with pytest.raises(ValueError, match="FabricEval"):
+        res.objectives(("images_per_sec", "p99_cycles"))
+
+
 def test_frontier_on_sweep_is_sane():
     pts = design_grid(networks=("vgg11",), pe_multipliers=(1.0, 2.0, 4.0))
     res = run_sweep(pts, **FAST_KW)

@@ -93,6 +93,23 @@ def test_pool_timeline_accounts_all_busy_cycles():
     assert tl.sum() == pytest.approx(s.sum() * 4)
 
 
+def test_pool_tie_break_is_lowest_index():
+    """Replicas freeing at the same cycle must be chosen lowest-index-first
+    (deterministic, matching the vtime kernel) — observable via the stored
+    per-server free times."""
+    pool = ServerPool(3)
+    pool.dispatch(0.0, np.array([2.0]))
+    assert pool.avail == [2.0, 0.0, 0.0]  # server 0, not an arbitrary heap pick
+    pool.dispatch(0.0, np.array([1.0]))
+    assert pool.avail == [2.0, 1.0, 0.0]
+    # grown server ties with an old one at t_free: the old (lower) index wins
+    pool = ServerPool(1)
+    pool.freeze_until(5.0)
+    pool.grow(1, t_free=5.0)
+    pool.dispatch(0.0, np.array([3.0]))
+    assert pool.avail == [8.0, 5.0]
+
+
 def test_event_calendar_orders_ties_by_insertion():
     cal = EventCalendar()
     cal.push(5.0, 1, 0)

@@ -29,3 +29,20 @@ def test_closed_loop_matches_analytic_resnet18(resnet, policy):
         ClosedLoop(n_requests=120, concurrency=40)
     )
     assert res.images_per_sec == pytest.approx(ana.images_per_sec, rel=0.10)
+
+
+def test_vtime_bit_identical_resnet18(resnet):
+    """The batched virtual-time kernel reproduces the event engine's
+    per-request times exactly on the ResNet18 closed-loop workload (the
+    VGG11 equivalences live in test_fabric_vtime.py)."""
+    import numpy as np
+
+    from repro.fabric import VirtualTimeFabric
+
+    spec, prof = resnet
+    alloc = allocate(spec, prof, "blockwise", spec.min_pes() * 2)
+    proc = ClosedLoop(n_requests=30, concurrency=12)
+    ref = FabricSim(spec, prof, alloc, seed=1).run(proc)
+    res = VirtualTimeFabric(spec, prof).run_batch([alloc], proc, seed=1)
+    np.testing.assert_array_equal(res.completions[0], ref.completions)
+    np.testing.assert_array_equal(res.arrivals[0], ref.arrivals)

@@ -76,6 +76,28 @@ def test_zskip_mask_zeroes_live_tiles():
     np.testing.assert_array_equal(np.asarray(got), np.full((128, 64), 64.0, np.float32))
 
 
+def test_zskip_forward_matches_dense_matmul_on_masked_input():
+    """End-to-end interpret-mode smoke: when the mask is DERIVED from an
+    activation whose masked tiles are genuinely all-zero (the op wrapper's
+    contract), the kernel must reproduce the plain dense matmul ``a @ b`` —
+    skipping changes nothing because the skipped tiles contribute nothing."""
+    from repro.kernels.ref import block_mask_ref
+
+    key = jax.random.PRNGKey(7)
+    ka, kb = jax.random.split(key)
+    a = jax.nn.relu(jax.random.normal(ka, (128, 256)))
+    # zero out a structured half of the tiles (post-ReLU sparsity pattern)
+    keep = jnp.kron(jnp.array([[1, 0, 0, 1], [0, 1, 1, 0]], jnp.float32), jnp.ones((64, 64)))
+    a = a * keep
+    b = jax.random.normal(kb, (256, 128))
+    mask = block_mask_ref(a, 64, 64)
+    assert int(mask.sum()) == 4  # half the 2x4 grid really is skipped
+    got = zskip_matmul(a, b, mask, bm=64, bn=64, bk=64, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(a @ b), rtol=1e-4, atol=1e-4
+    )
+
+
 def test_zskip_rejects_unaligned_shapes():
     a = jnp.zeros((100, 128))
     b = jnp.zeros((128, 128))
