@@ -1,0 +1,114 @@
+"""Bench-drift guard: fail if a freshly-run BENCH_*.json regresses vs the
+committed baseline.
+
+Compares every ``BENCH_<mode>.json`` in the working tree (the nightly job
+regenerates them with ``benchmarks.run --json``) against the version at a
+git ref (default ``HEAD`` — i.e. the previous commit's numbers, since the
+fresh run overwrote the checkout's files).  Two headline metric families
+are extracted from each mode's ``rows``:
+
+  * ``us_per_call`` (lower is better) — skipped when the baseline is 0
+    (modes that report a pure derived metric).
+  * ``speedup=<x>x`` parsed from ``derived`` (higher is better) — the
+    batch-vs-scalar acceptance numbers (fabric_tail, dse).
+
+A metric FAILS when it is worse than baseline by more than ``--tolerance``
+(default 10%).  Shared-runner wall-clock is noisy, so the default checks
+only the speedup ratios (self-normalizing); pass ``--strict-timing`` to
+also enforce the raw ``us_per_call`` timings.
+
+  PYTHONPATH=src python benchmarks/check_drift.py             # vs HEAD
+  python benchmarks/check_drift.py --base HEAD~1 --tolerance 0.15
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import re
+import subprocess
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+# metric keys may contain '@' and '.' (retention8chip@64gbps=1.00x); value
+# must end in 'x' so latency/ms fields never match
+_SPEEDUP = re.compile(r"([\w.@]+)=([0-9.]+)x")
+
+
+def _baseline(ref: str, name: str) -> dict | None:
+    try:
+        out = subprocess.run(
+            ["git", "show", f"{ref}:{name}"],
+            cwd=REPO_ROOT,
+            capture_output=True,
+            text=True,
+            check=True,
+        ).stdout
+    except subprocess.CalledProcessError:
+        return None  # new bench mode: nothing to drift from
+    return json.loads(out)
+
+
+def _metrics(doc: dict, timing: bool) -> dict[str, tuple[float, bool]]:
+    """{metric name: (value, higher_is_better)} for one bench document."""
+    out: dict[str, tuple[float, bool]] = {}
+    for row in doc.get("rows", []):
+        name = row.get("name", "?")
+        if timing and row.get("us_per_call", 0) > 0:
+            out[f"{name}.us_per_call"] = (float(row["us_per_call"]), False)
+        for key, val in _SPEEDUP.findall(str(row.get("derived", ""))):
+            if "speedup" in key or "retention" in key:
+                out[f"{name}.{key}"] = (float(val), True)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--base", default="HEAD", help="git ref holding the baseline")
+    ap.add_argument("--tolerance", type=float, default=0.10)
+    ap.add_argument(
+        "--strict-timing",
+        action="store_true",
+        help="also enforce raw us_per_call timings (noisy on shared runners)",
+    )
+    args = ap.parse_args(argv)
+
+    failures, checked = [], 0
+    for path in sorted(REPO_ROOT.glob("BENCH_*.json")):
+        cur = json.loads(path.read_text())
+        base = _baseline(args.base, path.name)
+        if base is None:
+            print(f"{path.name}: no baseline at {args.base}, skipping")
+            continue
+        cm = _metrics(cur, args.strict_timing)
+        bm = _metrics(base, args.strict_timing)
+        # a baseline key absent from the fresh run (renamed bench row,
+        # changed grid size in the name) silently disables its guard — say
+        # so loudly in the nightly log rather than skipping in silence
+        for key in sorted(set(bm) - set(cm)):
+            print(f"WARN {path.name}:{key} in baseline but not in fresh run")
+        for key, (bv, hib) in bm.items():
+            if key not in cm or bv <= 0:
+                continue
+            cv = cm[key][0]
+            checked += 1
+            ratio = cv / bv
+            bad = ratio < 1.0 - args.tolerance if hib else ratio > 1.0 + args.tolerance
+            mark = "FAIL" if bad else "ok"
+            if bad or ratio != 1.0:
+                print(
+                    f"{mark:4s} {path.name}:{key} {bv:.3g} -> {cv:.3g} "
+                    f"({'+' if ratio >= 1 else ''}{(ratio - 1) * 100:.1f}%)"
+                )
+            if bad:
+                failures.append(key)
+    print(f"checked {checked} metrics, {len(failures)} regressed")
+    if failures:
+        print("regressions:", ", ".join(failures), file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -24,6 +24,20 @@ _JSON_ROWS: list[dict] = []
 _JSON_DETAILS: list[list] = []
 
 
+def write_bench_json(mode: str, payload: dict) -> pathlib.Path:
+    """Serialize one bench mode's payload to ``BENCH_<mode>.json`` at the
+    repo root — the single write path every mode shares (schema: mode,
+    config, wall_clock_s, rows, details).  ``benchmarks/check_drift.py``
+    and the nightly CI artifact upload both consume exactly this layout."""
+    import json
+
+    path = REPO_ROOT / f"BENCH_{mode}.json"
+    with open(path, "w") as f:
+        json.dump({"mode": mode, **payload}, f, indent=2)
+    print(f"# wrote {path}", file=sys.stderr)
+    return path
+
+
 def _bench_config() -> dict:
     import platform
 
@@ -505,6 +519,57 @@ def dse():
         )
 
 
+def fabric_multichip():
+    """Equal-silicon scale-out: one fabric budget tiled over 1..8 chips at
+    several link bandwidths, placed by the communication-aware allocator and
+    measured on the batched virtual-time engine WITH inter-chip transfer
+    delays.  The headline is the chip-scaling curve: throughput retention
+    and p99 inflation vs the single-chip design at each link speed."""
+    from repro.dse import (
+        MULTICHIP_OBJECTIVES,
+        chip_grid,
+        pareto_frontier,
+        run_multichip_sweep,
+    )
+
+    chips = (1, 2, 4, 8)
+    links = (16.0, 64.0, 256.0)
+    pts = chip_grid(
+        networks=("vgg11",), chips=chips, link_gbps=links, pe_multiplier=2.0
+    )
+    t0 = time.perf_counter()
+    res = run_multichip_sweep(
+        pts, n_requests=200, closed_requests=60, concurrency=24,
+        sample_patches=64, seed=0,
+    )
+    us = (time.perf_counter() - t0) * 1e6
+    rows = {(p.n_chips, p.link_gbps): i for i, p in enumerate(res.points)}
+    ret = {
+        g: res.images_per_sec[rows[(8, g)]] / res.images_per_sec[rows[(1, g)]]
+        for g in links
+    }
+    p99x = {
+        g: res.p99_cycles[rows[(8, g)]] / res.p99_cycles[rows[(1, g)]]
+        for g in links
+    }
+    frontier = pareto_frontier(res, MULTICHIP_OBJECTIVES)
+    _row(
+        f"fabric_multichip_vgg11_{len(pts)}cfg",
+        us,
+        ";".join(f"retention8chip@{g:.0f}gbps={ret[g]:.2f}x" for g in links)
+        + ";"
+        + ";".join(f"p99_8chip@{g:.0f}gbps={p99x[g]:.2f}x" for g in links)
+        + f";pareto_points={len(frontier)}",
+    )
+    for r in res.rows():
+        _detail(
+            "fabric_multichip", r["network"], r["n_chips"],
+            f"{r['link_gbps']:.0f}", f"{r['images_per_sec']:.1f}",
+            f"{r['p50_ms']:.4f}", f"{r['p95_ms']:.4f}", f"{r['p99_ms']:.4f}",
+            f"{r['max_stage_transfer_cycles']:.0f}", r["n_crossings"],
+        )
+
+
 ALL = {
     "fig4": fig4,
     "fig6": fig6,
@@ -519,6 +584,7 @@ ALL = {
     "fabric_tail": fabric_tail,
     "fabric_drift": fabric_drift,
     "fabric_multitenant": fabric_multitenant,
+    "fabric_multichip": fabric_multichip,
     "dse": dse,
 }
 
@@ -540,22 +606,15 @@ def main() -> None:
         ALL[n]()
         wall = time.perf_counter() - t0
         if write_json:
-            import json
-
-            path = REPO_ROOT / f"BENCH_{n}.json"
-            with open(path, "w") as f:
-                json.dump(
-                    {
-                        "mode": n,
-                        "config": config,
-                        "wall_clock_s": round(wall, 3),
-                        "rows": _JSON_ROWS[r0:],
-                        "details": _JSON_DETAILS[d0:],
-                    },
-                    f,
-                    indent=2,
-                )
-            print(f"# wrote {path}", file=sys.stderr)
+            write_bench_json(
+                n,
+                {
+                    "config": config,
+                    "wall_clock_s": round(wall, 3),
+                    "rows": _JSON_ROWS[r0:],
+                    "details": _JSON_DETAILS[d0:],
+                },
+            )
 
 
 if __name__ == "__main__":

@@ -7,14 +7,28 @@ Walks the serving questions the analytic model cannot answer:
      whole (policy x load) grid per jit call, and `provision_latency_aware`
      uses it to pick replicas by measured p99 at the offered load,
   3. input-distribution drift + online re-allocation from a reserve,
-  4. two networks sharing one fabric with weighted-fair allocation.
+  4. two networks sharing one fabric with weighted-fair allocation,
+  5. the same silicon tiled over several chips: communication-aware
+     placement (chip -> PE -> array tree) vs naively serialized placement,
+     with inter-chip transfer delays on the request path.
 
 Run:  PYTHONPATH=src python examples/fabric_serving.py
+      PYTHONPATH=src python examples/fabric_serving.py --chips 4 --link-gbps 32
 """
+
+import argparse
 
 import numpy as np
 
-from repro.core.cim import allocate, profile_network, simulate, vgg11_cifar10
+from repro.core.cim import (
+    FabricTopology,
+    allocate,
+    allocate_placed,
+    place_allocation,
+    profile_network,
+    simulate,
+    vgg11_cifar10,
+)
 from repro.core.cim.simulate import ARRAYS_PER_PE, CLOCK_HZ
 from repro.fabric import (
     ClosedLoop,
@@ -36,7 +50,22 @@ def fmt(st):
     return f"p50={st.p50:7.3f}ms  p95={st.p95:7.3f}ms  p99={st.p99:7.3f}ms"
 
 
+def parse_args():
+    ap = argparse.ArgumentParser(description="CIM fabric serving walkthrough")
+    ap.add_argument(
+        "--chips", type=int, default=4,
+        help="chips the fixed array budget is tiled over in the multi-chip "
+        "section (1 = the flat single-chip fabric, zero transfer cost)",
+    )
+    ap.add_argument(
+        "--link-gbps", type=float, default=32.0,
+        help="inter-chip link bandwidth (Gbit/s) for the multi-chip section",
+    )
+    return ap.parse_args()
+
+
 def main():
+    args = parse_args()
     spec = vgg11_cifar10()
     print(f"profiling {spec.name} ({spec.n_arrays} arrays, {spec.n_blocks} blocks)...")
     prof = profile_network(spec, n_images=2)
@@ -115,6 +144,56 @@ def main():
               f"ips={d['images_per_sec']:8.0f}  p99={d['latency_ms_p99']:.3f}ms")
     print(f"  weighted rate balance: {rep['weighted_rate_balance']:.2f} "
           f"(1.0 = perfectly weight-proportional)")
+
+    # ---- 5. the same silicon tiled over several chips
+    n_chips = max(1, args.chips)
+    pes_total = pes + (-pes) % n_chips  # divisible equal-silicon split
+    print(f"\n== multi-chip: {pes_total} PEs over {n_chips} chip(s), "
+          f"{args.link_gbps:.0f} Gbps links ==")
+    topo = FabricTopology.split(
+        n_chips, pes_total, link_gbps=args.link_gbps
+    )
+    flat = allocate(spec, prof, "blockwise", pes_total)
+    placed = allocate_placed(spec, prof, "blockwise", topo)
+    alloc_blind, alloc_aware = flat, placed.allocation
+    pl_aware = placed.placement
+    try:
+        striped = place_allocation(spec, flat, topo, strategy="stripe")
+    except ValueError as e:
+        # a fully-spent flat budget can be unplaceable under blind striping
+        # (capacity fragments across chips) — itself an argument for
+        # placement-aware allocation.  Re-run the comparison at a slack
+        # budget with IDENTICAL counts on both sides so the printed gap is
+        # purely the placement's.
+        print(f"  [striping fragmented the tree: {e}; comparing at 70% budget]")
+        free = topo.total_arrays - spec.n_arrays
+        flat = allocate(
+            spec, prof, "blockwise", pes_total, free_budget=int(free * 0.7)
+        )
+        alloc_blind = alloc_aware = flat
+        striped = place_allocation(spec, flat, topo, strategy="stripe")
+        pl_aware = place_allocation(spec, flat, topo, strategy="locality")
+    proc = PoissonOpen(300, 0.5 * cap / CLOCK_HZ, seed=13)
+    res = vt.run_batch(
+        [alloc_blind, alloc_aware],
+        proc,
+        seed=6,
+        placements=[striped, pl_aware],
+    )
+    ms = 1e3 / CLOCK_HZ
+    for name, pl, i in (
+        ("striped placement (blind)", striped, 0),
+        ("comm-aware placement", pl_aware, 1),
+    ):
+        st = res.latency(i)
+        print(f"  {name:26s} {fmt(st.scaled(ms))}  "
+              f"worst stage transfer={pl.max_stage_transfer:8.0f} cyc  "
+              f"off-source replicas={pl.n_crossings}")
+    if n_chips == 1:
+        flat_res = vt.run_batch([flat], proc, seed=6)
+        same = np.array_equal(flat_res.completions[0], res.completions[0])
+        print(f"  single chip: transfers all zero; bit-identical to the flat "
+              f"fabric engine: {same}")
 
 
 if __name__ == "__main__":

@@ -45,6 +45,11 @@ class ArrayConfig:
     input_bits: int = 8
     adc_bits: int = 3
     adc_share: int = 8  # columns per ADC -> cycles per read
+    # interconnect characteristics (consumed by core.cim.topology): latency
+    # of one NoC hop between neighboring PEs, in fabric cycles, and the NoC
+    # flit width in bytes (how many activation bytes move per hop-cycle).
+    noc_hop_cycles: int = 2
+    noc_flit_bytes: int = 16
 
     @property
     def rows_per_read(self) -> int:
@@ -58,6 +63,12 @@ class ArrayConfig:
     def logical_cols(self) -> int:
         """8-bit weights per array row of columns."""
         return self.cols * self.cell_bits // self.weight_bits
+
+    @property
+    def act_bytes(self) -> int:
+        """Bytes one quantized activation (word-line input) occupies on the
+        interconnect — what a patch row costs to move between stages."""
+        return -(-self.input_bits // 8)
 
     def min_cycles(self) -> int:
         return self.input_bits * 1 * self.cycles_per_read

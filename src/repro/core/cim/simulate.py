@@ -232,34 +232,47 @@ def allocate(
         if offered_ips <= 0:
             raise ValueError(f"offered_ips must be positive, got {offered_ips}")
         r_cyc = float(offered_ips) / CLOCK_HZ  # images per fabric cycle
-        # per-block FIFO pools: every patch of layer l brings one job to
-        # each of its blocks, so the pool's job rate is r * patches/image,
-        # arriving in request-batches of patches_per_image; a layer (= one
-        # pipeline stage) is a group — its latency is its slowest pool's
-        mean, scv, job_rate, cost, batch, group = [], [], [], [], [], []
-        for i, layer in enumerate(spec.layers):
-            m = cyc[i].mean(axis=0)
-            v = cyc[i].var(axis=0)
-            mean.append(m)
-            scv.append(v / np.maximum(m, 1e-300) ** 2)
-            job_rate.append(np.full(layer.n_blocks, r_cyc * layer.patches_per_image))
-            cost.append(np.full(layer.n_blocks, float(layer.arrays_per_block)))
-            batch.append(np.full(layer.n_blocks, float(layer.patches_per_image)))
-            group.append(np.full(layer.n_blocks, i, dtype=np.int64))
+        job_rate, mean, scv, cost, batch, group = _queueing_inputs(spec, cyc, r_cyc)
         res = queueing_allocate(
-            np.concatenate(job_rate),
-            np.concatenate(mean),
-            np.concatenate(scv),
-            np.concatenate(cost),
-            free,
-            batch_size=np.concatenate(batch),
-            group=np.concatenate(group),
+            job_rate, mean, scv, cost, free, batch_size=batch, group=group
         )
         block_dups = split_block_dups(spec, res.replicas)
-        used = int(base_arrays + ((res.replicas - 1) * np.concatenate(cost)).sum())
+        used = int(base_arrays + ((res.replicas - 1) * cost).sum())
         return Allocation(policy, None, block_dups, used, total)
 
     raise ValueError(policy)
+
+
+def _queueing_inputs(spec: NetworkSpec, cyc, r_cyc: float):
+    """Per-block queueing-model inputs for the ``latency_aware`` policy.
+
+    Per-block FIFO pools: every patch of layer ``l`` brings one job to each
+    of its blocks, so the pool's job rate is ``r * patches/image``, arriving
+    in request-batches of ``patches_per_image``; a layer (= one pipeline
+    stage) is a group — its latency is its slowest pool's.  Shared between
+    the flat ``allocate`` and the placed ``topology.allocate_placed`` so
+    their scoring inputs cannot drift apart (the single-chip bit-identity
+    guarantee hangs on it).  Returns flat (job_rate, mean, scv, cost,
+    batch, group) arrays over all blocks.
+    """
+    mean, scv, job_rate, cost, batch, group = [], [], [], [], [], []
+    for i, layer in enumerate(spec.layers):
+        m = cyc[i].mean(axis=0)
+        v = cyc[i].var(axis=0)
+        mean.append(m)
+        scv.append(v / np.maximum(m, 1e-300) ** 2)
+        job_rate.append(np.full(layer.n_blocks, r_cyc * layer.patches_per_image))
+        cost.append(np.full(layer.n_blocks, float(layer.arrays_per_block)))
+        batch.append(np.full(layer.n_blocks, float(layer.patches_per_image)))
+        group.append(np.full(layer.n_blocks, i, dtype=np.int64))
+    return (
+        np.concatenate(job_rate),
+        np.concatenate(mean),
+        np.concatenate(scv),
+        np.concatenate(cost),
+        np.concatenate(batch),
+        np.concatenate(group),
+    )
 
 
 # ------------------------------------------------------- array-kernel core
@@ -464,11 +477,18 @@ class BatchSimulator:
     compiled kernel as constants.  Runs in float64 (``jax.experimental
     .enable_x64``) so batch results match the scalar ``simulate()`` to
     roundoff — the golden-equivalence suite pins this at 1e-9.
+
+    ``shard=True`` shard_maps the vmapped kernel over the host's local
+    devices (``repro.distrib.sharding.shard_map_batch``): the batch is split
+    device-wise, so sweep throughput scales with the accelerators present.
+    Rows are evaluated independently either way — results are identical to
+    the unsharded path (the suite asserts it).
     """
 
-    def __init__(self, spec: NetworkSpec, prof: NetworkProfile):
+    def __init__(self, spec: NetworkSpec, prof: NetworkProfile, *, shard: bool = False):
         self.spec = spec
         self.tensors = pack_profile(spec, prof)
+        self.shard = bool(shard)
         self._compiled: dict[tuple, object] = {}
 
     def _fn(self, n_images: int, clock_hz: float):
@@ -498,7 +518,12 @@ class BatchSimulator:
                     clock_hz,
                 )
 
-            self._compiled[key] = jax.jit(jax.vmap(one))
+            if self.shard:
+                from ...distrib.sharding import shard_map_batch
+
+                self._compiled[key] = shard_map_batch(jax.vmap(one))
+            else:
+                self._compiled[key] = jax.jit(jax.vmap(one))
         return self._compiled[key]
 
     def __call__(

@@ -32,9 +32,60 @@ __all__ = [
     "param_specs",
     "cache_specs",
     "data_specs",
+    "local_eval_mesh",
     "named",
+    "shard_map_batch",
     "tp_size",
 ]
+
+
+def local_eval_mesh(axis: str = "batch") -> Mesh:
+    """1-D mesh over every local device — the data-parallel axis batched
+    evaluation kernels (DSE allocate/simulate, virtual-time fabric) shard
+    over.  On a 1-device host this is a degenerate mesh and sharded
+    evaluation reduces to the plain path."""
+    return Mesh(np.array(jax.devices()), (axis,))
+
+
+def shard_map_batch(fn, *, mesh: Mesh | None = None, axis: str = "batch"):
+    """Shard a batched-leading-axis kernel over the host's local devices.
+
+    ``fn`` maps arrays with a shared leading batch dimension C to arrays
+    (or a pytree of arrays) with the same leading dimension — exactly the
+    shape of the vmapped DSE evaluators (``BatchSimulator``'s kernel).  The
+    wrapper pads C up to a device multiple (repeating row 0 — evaluation is
+    per-row independent, so padding rows are wasted work, never wrong
+    answers), jits the shard_mapped ``fn`` so each device evaluates its C/D
+    slice, and strips the padding from every output leaf.  Sweep throughput
+    then scales with the host's accelerators instead of saturating one.
+
+    Pass ``fn`` un-jitted (e.g. the bare ``vmap``ed kernel): the jit happens
+    here, outside the pad/unpad (which stays in plain numpy so compilation
+    caches key on the padded shape only).
+    """
+    from .compat import shard_map
+
+    m = mesh if mesh is not None else local_eval_mesh(axis)
+    n_dev = int(np.prod([m.shape[a] for a in m.axis_names]))
+    from jax.sharding import PartitionSpec as _P
+
+    spec = _P(axis)
+    inner = jax.jit(shard_map(fn, mesh=m, in_specs=spec, out_specs=spec))
+
+    def wrapped(*args):
+        C = args[0].shape[0]
+        pad = (-C) % n_dev
+        if pad:
+            args = tuple(
+                np.concatenate([a, np.repeat(a[:1], pad, axis=0)], axis=0)
+                for a in args
+            )
+        out = inner(*args)
+        if pad:
+            out = jax.tree.map(lambda o: o[:C], out)
+        return out
+
+    return wrapped
 
 
 def batch_axes(mesh: Mesh) -> tuple[str, ...]:

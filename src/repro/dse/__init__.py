@@ -14,16 +14,21 @@ from .engine import AllocationBatch, allocate_batch, run_batch, to_allocation
 from .pareto import (
     DEFAULT_OBJECTIVES,
     LATENCY_OBJECTIVES,
+    MULTICHIP_OBJECTIVES,
     pareto_frontier,
     pareto_mask,
 )
 from .sweep import (
+    ChipSweepPoint,
+    ChipSweepResult,
     FabricEval,
     SweepPoint,
     SweepResult,
+    chip_grid,
     clear_caches,
     design_grid,
     get_profiled,
+    run_multichip_sweep,
     run_sweep,
 )
 
@@ -34,13 +39,18 @@ __all__ = [
     "to_allocation",
     "DEFAULT_OBJECTIVES",
     "LATENCY_OBJECTIVES",
+    "MULTICHIP_OBJECTIVES",
     "pareto_frontier",
     "pareto_mask",
+    "ChipSweepPoint",
+    "ChipSweepResult",
     "FabricEval",
     "SweepPoint",
     "SweepResult",
+    "chip_grid",
     "clear_caches",
     "design_grid",
     "get_profiled",
+    "run_multichip_sweep",
     "run_sweep",
 ]

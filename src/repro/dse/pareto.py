@@ -17,6 +17,7 @@ __all__ = [
     "pareto_frontier",
     "DEFAULT_OBJECTIVES",
     "LATENCY_OBJECTIVES",
+    "MULTICHIP_OBJECTIVES",
 ]
 
 # (column, maximize?) — fewer arrays is better, more img/s and util are better
@@ -33,6 +34,15 @@ LATENCY_OBJECTIVES = (
     ("images_per_sec", True),
     ("p99_cycles", False),
     ("mean_utilization", True),
+)
+
+# scale-out frontier over ``run_multichip_sweep`` results: what you serve,
+# what users feel with inter-chip transfers on the critical path, and how
+# many chips you must package/interconnect (fewer is cheaper)
+MULTICHIP_OBJECTIVES = (
+    ("images_per_sec", True),
+    ("p99_cycles", False),
+    ("n_chips", False),
 )
 
 
@@ -60,7 +70,11 @@ def pareto_mask(values: np.ndarray, maximize) -> np.ndarray:
 def pareto_frontier(
     result: SweepResult, objectives=DEFAULT_OBJECTIVES
 ) -> np.ndarray:
-    """Indices of frontier points, sorted by the first objective."""
+    """Indices of frontier points, sorted by the first objective.
+
+    Duck-typed on ``result.objectives(names)`` — works for ``SweepResult``
+    and ``ChipSweepResult`` alike (pass ``MULTICHIP_OBJECTIVES`` for the
+    latter's throughput/p99/chips frontier)."""
     names = tuple(n for n, _ in objectives)
     maximize = [m for _, m in objectives]
     vals = result.objectives(names)

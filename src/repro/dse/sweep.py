@@ -29,13 +29,18 @@ from ..core.cim.simulate import (
     allocate,
     simulate,
 )
+from ..core.cim.topology import FabricTopology, allocate_placed
 from .engine import run_batch, to_allocation
 
 __all__ = [
+    "ChipSweepPoint",
+    "ChipSweepResult",
     "FabricEval",
     "SweepPoint",
     "SweepResult",
+    "chip_grid",
     "design_grid",
+    "run_multichip_sweep",
     "run_sweep",
     "get_profiled",
     "clear_caches",
@@ -199,6 +204,7 @@ def run_sweep(
     engine: str = "batch",
     fabric: FabricEval | None = None,
     latency_load_frac: float | None = None,
+    shard_devices: bool = False,
 ) -> SweepResult:
     """Evaluate every point; profiles are cached and excluded from timing.
 
@@ -211,7 +217,11 @@ def run_sweep(
     ``latency_load_frac`` is the offered load ``latency_aware`` design
     points are *provisioned* for; it defaults to the load they are
     *evaluated* at (``fabric.load_frac``, else 0.7) so the two knobs cannot
-    silently disagree."""
+    silently disagree.
+
+    ``shard_devices=True`` shard_maps the batched analytic evaluation over
+    the host's local devices (``distrib.sharding.shard_map_batch``) —
+    identical results, throughput scaling with the accelerators present."""
     if engine not in ("batch", "scalar"):
         raise ValueError(f"engine must be 'batch' or 'scalar', got {engine!r}")
     if latency_load_frac is None:
@@ -244,9 +254,9 @@ def run_sweep(
         t0 = time.perf_counter()
         allocs = None
         if engine == "batch":
-            key = (net, arr, profile_images, sample_patches, seed)
+            key = (net, arr, profile_images, sample_patches, seed, shard_devices)
             if key not in _SIMULATOR_CACHE:
-                _SIMULATOR_CACHE[key] = BatchSimulator(spec, prof)
+                _SIMULATOR_CACHE[key] = BatchSimulator(spec, prof, shard=shard_devices)
             alloc, res = run_batch(
                 spec,
                 prof,
@@ -299,6 +309,237 @@ def run_sweep(
         p95_cycles=pcts[:, 1] if fabric is not None else None,
         p99_cycles=pcts[:, 2] if fabric is not None else None,
         fabric=fabric,
+    )
+
+
+# ------------------------------------------------------- multi-chip sweep
+@dataclass(frozen=True)
+class ChipSweepPoint:
+    """One multi-chip design point: the SAME total silicon (``n_pes_total``
+    PEs) tiled over ``n_chips`` chips strung on ``link_gbps`` links."""
+
+    network: str
+    n_chips: int
+    link_gbps: float
+    n_pes_total: int
+    policy: str = "blockwise"
+    array: ArrayConfig = DEFAULT_ARRAY
+
+    def topology(self, arrays_per_pe: int = ARRAYS_PER_PE) -> FabricTopology:
+        return FabricTopology.split(
+            self.n_chips, self.n_pes_total,
+            arrays_per_pe=arrays_per_pe, link_gbps=self.link_gbps,
+            array=self.array,
+        )
+
+
+@dataclass
+class ChipSweepResult:
+    """Columnar multi-chip sweep outcome; row i <-> ``points[i]``.
+
+    ``objectives``-compatible with ``pareto_frontier`` — the
+    (throughput, p99, chips) frontier is ``MULTICHIP_OBJECTIVES``.
+    """
+
+    points: list[ChipSweepPoint]
+    images_per_sec: np.ndarray  # (C,) closed-loop steady rate WITH transfers
+    p50_cycles: np.ndarray
+    p95_cycles: np.ndarray
+    p99_cycles: np.ndarray
+    max_stage_transfer: np.ndarray  # (C,) worst per-request entry delay
+    n_crossings: np.ndarray  # (C,) replicas parked off their source chip
+    arrays_used: np.ndarray
+    arrays_total: np.ndarray
+    elapsed_s: float
+
+    def __len__(self) -> int:
+        return len(self.points)
+
+    def objectives(self, names: tuple[str, ...]) -> np.ndarray:
+        cols = {
+            "n_chips": np.asarray([p.n_chips for p in self.points], dtype=np.float64),
+            "link_gbps": np.asarray([p.link_gbps for p in self.points]),
+        }
+        out = []
+        for n in names:
+            v = cols.get(n)
+            if v is None:
+                v = np.asarray(getattr(self, n), dtype=np.float64)
+            out.append(v)
+        return np.stack(out, axis=1)
+
+    def rows(self) -> list[dict]:
+        out = []
+        for i, p in enumerate(self.points):
+            out.append(
+                {
+                    "network": p.network,
+                    "policy": p.policy,
+                    "n_chips": p.n_chips,
+                    "link_gbps": p.link_gbps,
+                    "n_pes_total": p.n_pes_total,
+                    "images_per_sec": float(self.images_per_sec[i]),
+                    "p50_ms": float(self.p50_cycles[i] / CLOCK_HZ * 1e3),
+                    "p95_ms": float(self.p95_cycles[i] / CLOCK_HZ * 1e3),
+                    "p99_ms": float(self.p99_cycles[i] / CLOCK_HZ * 1e3),
+                    "max_stage_transfer_cycles": float(self.max_stage_transfer[i]),
+                    "n_crossings": int(self.n_crossings[i]),
+                    "arrays_used": int(self.arrays_used[i]),
+                    "arrays_total": int(self.arrays_total[i]),
+                }
+            )
+        return out
+
+
+def chip_grid(
+    networks=("vgg11",),
+    chips=(1, 2, 4, 8),
+    link_gbps=(16.0, 64.0),
+    policy: str = "blockwise",
+    pe_multiplier: float = 2.0,
+    arrays_per_pe: int = ARRAYS_PER_PE,
+    arrays=(DEFAULT_ARRAY,),
+) -> list[ChipSweepPoint]:
+    """chips x link-bandwidth grid at a FIXED total array budget per
+    network: ``pe_multiplier`` times the minimum design, rounded up so every
+    chip count divides it — the equal-silicon scaling comparison."""
+    import math
+
+    points = []
+    div = math.lcm(*(int(c) for c in chips))
+    for net in networks:
+        for arr in arrays:
+            spec = _spec_for(net, arr)
+            base = spec.min_pes(arrays_per_pe)
+            total = int(np.ceil(base * pe_multiplier))
+            total = -(-total // div) * div
+            for c in chips:
+                for g in link_gbps:
+                    points.append(
+                        ChipSweepPoint(net, int(c), float(g), total, policy, arr)
+                    )
+    return points
+
+
+def run_multichip_sweep(
+    points: list[ChipSweepPoint],
+    *,
+    load_frac: float = 0.7,
+    n_requests: int = 200,
+    closed_requests: int = 80,
+    concurrency: int = 32,
+    seed: int = 0,
+    profile_images: int = 1,
+    sample_patches: int = 128,
+    arrays_per_pe: int = ARRAYS_PER_PE,
+    engine: str = "jax",
+    latency_load_frac: float = 0.7,
+) -> ChipSweepResult:
+    """Evaluate a chips x link-bandwidth grid on the placed fabric.
+
+    Per (network, array) group: every point's placed allocation
+    (``allocate_placed`` on its ``FabricTopology``) runs through TWO batched
+    virtual-time calls — a closed loop for steady throughput (transfer
+    delays included) and an open-loop Poisson trace at ``load_frac`` of the
+    point's own measured throughput for tail percentiles.  Traces share one
+    normalized gap sequence (common random numbers), so differences across
+    points are placement/topology effects, not noise.  ``engine="numpy"``
+    runs the identical kernels scalar (the equivalence reference).
+    """
+    from ..fabric.arrivals import ClosedLoop, TraceReplay
+    from ..fabric.vtime import VirtualTimeFabric
+
+    C = len(points)
+    ips = np.zeros(C)
+    pcts = np.zeros((C, 3))
+    xfer_max = np.zeros(C)
+    crossings = np.zeros(C, dtype=np.int64)
+    used = np.zeros(C, dtype=np.int64)
+    total = np.zeros(C, dtype=np.int64)
+
+    groups: dict[tuple, list[int]] = {}
+    for i, p in enumerate(points):
+        groups.setdefault((p.network, p.array), []).append(i)
+    prof_kw = dict(
+        profile_images=profile_images, sample_patches=sample_patches, seed=seed
+    )
+    for net, arr in groups:
+        get_profiled(net, arr, **prof_kw)
+
+    elapsed = 0.0
+    qs = (50.0, 95.0, 99.0)
+    for (net, arr), rows in groups.items():
+        spec, prof = get_profiled(net, arr, **prof_kw)
+        # dedupe physically identical points: on one chip the link is
+        # unused, so every link_gbps value names the same design — evaluate
+        # each unique topology once and alias the rest onto it
+        alias: dict[int, int] = {}
+        canon: dict[tuple, int] = {}
+        uniq: list[int] = []
+        for i in rows:
+            p = points[i]
+            key = (
+                p.policy, p.n_pes_total, p.n_chips,
+                p.link_gbps if p.n_chips > 1 else None,
+            )
+            if key not in canon:
+                canon[key] = i
+                uniq.append(i)
+            alias[i] = canon[key]
+        placed = []
+        for i in uniq:
+            p = points[i]
+            pa = allocate_placed(
+                spec, prof, p.policy, p.topology(arrays_per_pe),
+                load_frac=latency_load_frac,
+            )
+            placed.append(pa)
+            xfer_max[i] = pa.placement.max_stage_transfer
+            crossings[i] = pa.placement.n_crossings
+            used[i] = pa.allocation.arrays_used
+            total[i] = pa.allocation.arrays_total
+        allocs = [pa.allocation for pa in placed]
+        places = [pa.placement for pa in placed]
+        t0 = time.perf_counter()
+        vt = VirtualTimeFabric(spec, prof, lane_quantum=8)
+        # throughput: saturated closed loop, transfer delays included
+        cl = vt.run_batch(
+            allocs, ClosedLoop(closed_requests, concurrency),
+            seed=seed, engine=engine, percentiles=qs, placements=places,
+        )
+        ips[uniq] = cl.images_per_sec
+        # tail: Poisson at load_frac of each point's own throughput, one
+        # shared normalized gap sequence (common random numbers)
+        gaps = np.random.default_rng(seed).exponential(1.0, size=n_requests)
+        rates = load_frac * ips[uniq] / CLOCK_HZ
+        procs = [TraceReplay(np.cumsum(gaps) / r) for r in rates]
+        op = vt.run_batch(
+            allocs, procs, seed=seed, engine=engine, percentiles=qs,
+            placements=places,
+        )
+        pcts[uniq] = np.percentile(op.latencies, qs, axis=1).T
+        for i in rows:
+            j = alias[i]
+            if j != i:
+                ips[i] = ips[j]
+                pcts[i] = pcts[j]
+                xfer_max[i] = xfer_max[j]
+                crossings[i] = crossings[j]
+                used[i] = used[j]
+                total[i] = total[j]
+        elapsed += time.perf_counter() - t0
+
+    return ChipSweepResult(
+        points=list(points),
+        images_per_sec=ips,
+        p50_cycles=pcts[:, 0],
+        p95_cycles=pcts[:, 1],
+        p99_cycles=pcts[:, 2],
+        max_stage_transfer=xfer_max,
+        n_crossings=crossings,
+        arrays_used=used,
+        arrays_total=total,
+        elapsed_s=elapsed,
     )
 
 

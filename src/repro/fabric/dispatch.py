@@ -22,6 +22,15 @@ per-(patch, block) cycle sample — or, for drift studies, from a second
 the original one.  Draws are presampled request-major at the start of a run
 (``vtime.sample_service_indices``), so the virtual-time engines consume
 identical randomness and reproduce this engine bit for bit.
+
+Multi-chip fabrics add one term: a ``Placement`` (``core.cim.topology``)
+carries a per-stage entry transfer delay — the cycles a request's
+activations spend crossing inter-chip links to reach the stage's farthest
+replica — and the dispatcher simply dispatches stage ``s`` at ``t +
+stage_transfer[s]``.  The virtual-time kernel adds the identical IEEE
+operation at the identical point, so the engines stay bit-identical with
+transfer delays enabled; a single-chip placement has all-zero transfers and
+reproduces the flat engine exactly.
 """
 
 from __future__ import annotations
@@ -67,11 +76,24 @@ class FabricSim:
         reallocator=None,
         clock_hz: float = CLOCK_HZ,
         record_timeline: bool = False,
+        placement=None,
     ):
         self.spec = spec
         self.alloc = alloc
         self.clock_hz = clock_hz
         self.reallocator = reallocator
+        # per-stage request entry transfer (core.cim.topology.Placement);
+        # None = flat single-chip fabric, zero added work on the hot path
+        self._xfer = (
+            None
+            if placement is None
+            else np.asarray(placement.stage_transfer, dtype=np.float64)
+        )
+        if self._xfer is not None and self._xfer.shape != (len(spec.layers),):
+            raise ValueError(
+                f"placement covers {self._xfer.shape[0]} stages, "
+                f"spec has {len(spec.layers)} layers"
+            )
         self.rng = np.random.default_rng(seed)
         zskip = alloc.policy != "baseline"
         cyc = _layer_patch_cycles(live_prof or prof, zskip)
@@ -108,6 +130,10 @@ class FabricSim:
 
     # ------------------------------------------------------------- internals
     def _dispatch_stage(self, stage_idx: int, t: float, req: int) -> float:
+        if self._xfer is not None:
+            # the request's activations cross the NoC/links before any of the
+            # stage's jobs can start — same op, same place as vtime's kernel
+            t = t + self._xfer[stage_idx]
         st = self.stages[stage_idx]
         idx = self._svc_idx[stage_idx][req]
         svc = st.services[idx]

@@ -6,7 +6,30 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-__all__ = ["LatencyStats", "ReallocationEvent", "FabricResult", "latency_stats", "steady_throughput"]
+__all__ = [
+    "LatencyStats",
+    "ReallocationEvent",
+    "FabricResult",
+    "latency_stats",
+    "percentile_kernel",
+    "steady_throughput",
+]
+
+
+def percentile_kernel(xp, lat, qs):
+    """Latency percentiles as pure array algebra over the module ``xp``.
+
+    The ONE implementation shared by the scalar accounting path
+    (``latency_stats``, ``xp=numpy``) and the jitted virtual-time fabric
+    kernel (``fabric.vtime.run_fabric_kernel``, ``xp=jax.numpy``), so the
+    in-kernel reduction cannot drift from the reference: both evaluate
+    ``xp.percentile`` (linear interpolation) on the same float64 latencies.
+    ``lat`` may be any shape reduced over its last axis by the caller's
+    convention (1-D here); ``qs`` is a sequence of percentile levels.
+    Callers guard the empty case (percentiles of zero requests are defined
+    as zeros at the result-container level, not here).
+    """
+    return xp.percentile(lat, xp.asarray(qs))
 
 
 @dataclass(frozen=True)
@@ -26,7 +49,7 @@ def latency_stats(latencies: np.ndarray) -> LatencyStats:
     lat = np.asarray(latencies, dtype=np.float64)
     if lat.size == 0:
         return LatencyStats(0, 0.0, 0.0, 0.0, 0.0, 0.0)
-    p50, p95, p99 = np.percentile(lat, [50, 95, 99])
+    p50, p95, p99 = percentile_kernel(np, lat, (50.0, 95.0, 99.0))
     return LatencyStats(int(lat.size), float(lat.mean()), float(p50), float(p95), float(p99), float(lat.max()))
 
 

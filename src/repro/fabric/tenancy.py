@@ -11,6 +11,15 @@ tenant's equally-slow block and soaks up replicas until it is half as slow.
 
 Tenants own disjoint arrays after allocation (a block is never shared), so
 the event simulations are independent; only the allocation couples them.
+
+On a multi-chip fabric (``allocate_shared(topology=...)``) tenants are
+additionally *placed*: each tenant's blocks land on the shared chip->PE->
+array tree sequentially (first-fit in layer order, extras penalty-greedy),
+so a tenant whose mandatory copy spills across a link pays the transfer on
+its own dataflow edges — the per-tenant ``Placement``s feed straight into
+``run_tenants``' simulations.  Replica COUNTS stay the flat weighted-fair
+greedy's (bit-identical with or without a topology); only locations and the
+resulting transfer delays are added.
 """
 
 from __future__ import annotations
@@ -51,6 +60,7 @@ class SharedAllocation:
     allocations: tuple[Allocation, ...]  # block-wise, one per tenant
     arrays_total: int
     arrays_used: int
+    placements: tuple | None = None  # per-tenant Placement (multi-chip only)
 
     @property
     def leftover(self) -> int:
@@ -61,13 +71,25 @@ def allocate_shared(
     tenants: list[Tenant],
     n_pes: int,
     arrays_per_pe: int = ARRAYS_PER_PE,
+    topology=None,
 ) -> SharedAllocation:
-    """Weighted-fair block-wise allocation of one fabric across tenants."""
+    """Weighted-fair block-wise allocation of one fabric across tenants.
+
+    ``topology`` (a ``core.cim.topology.FabricTopology`` spanning the same
+    array budget) additionally places every tenant on the chip tree —
+    sequentially in tenant order, so earlier (typically heavier-weight)
+    tenants pack closest to the host chip — and attaches the per-tenant
+    ``Placement``s the simulations consume."""
     if len(tenants) < 1:
         raise ValueError("need at least one tenant")
     if any(t.weight <= 0 for t in tenants):
         raise ValueError("tenant weights must be positive")
     total = n_pes * arrays_per_pe
+    if topology is not None and topology.total_arrays != total:
+        raise ValueError(
+            f"topology holds {topology.total_arrays} arrays but the fabric "
+            f"budget is {total} ({n_pes} PEs x {arrays_per_pe})"
+        )
     base = sum(t.spec.n_arrays for t in tenants)
     if total < base:
         raise ValueError(
@@ -95,7 +117,20 @@ def allocate_shared(
             Allocation("blockwise", None, split_block_dups(t.spec, rep), used, total)
         )
         k += size
-    return SharedAllocation(tuple(tenants), tuple(allocs), total, int(used_total))
+    placements = None
+    if topology is not None:
+        from ..core.cim.topology import place_allocation
+
+        free = np.full(topology.n_chips, float(topology.arrays_per_chip))
+        pls = []
+        for t, alloc in zip(tenants, allocs):
+            pl = place_allocation(t.spec, alloc, topology, chip_free=free)
+            free = free - pl.chip_arrays
+            pls.append(pl)
+        placements = tuple(pls)
+    return SharedAllocation(
+        tuple(tenants), tuple(allocs), total, int(used_total), placements
+    )
 
 
 def run_tenants(
@@ -109,9 +144,14 @@ def run_tenants(
     Slices are disjoint, so tenants simulate independently and exactly."""
     if len(procs) != len(shared.tenants):
         raise ValueError("one arrival process per tenant")
+    pls = shared.placements or (None,) * len(shared.tenants)
     out = []
-    for i, (t, alloc, proc) in enumerate(zip(shared.tenants, shared.allocations, procs)):
-        sim = FabricSim(t.spec, t.prof, alloc, seed=seed + i, clock_hz=clock_hz)
+    for i, (t, alloc, proc, pl) in enumerate(
+        zip(shared.tenants, shared.allocations, procs, pls)
+    ):
+        sim = FabricSim(
+            t.spec, t.prof, alloc, seed=seed + i, clock_hz=clock_hz, placement=pl
+        )
         res = sim.run(proc)
         res.tenant = t.name
         out.append(res)
@@ -123,7 +163,8 @@ def fairness_report(shared: SharedAllocation, results: list[FabricResult]) -> di
     fairness (ratio of weighted per-image service rates)."""
     per = {}
     shares = []
-    for t, alloc, r in zip(shared.tenants, shared.allocations, results):
+    pls = shared.placements or (None,) * len(shared.tenants)
+    for t, alloc, r, pl in zip(shared.tenants, shared.allocations, results, pls):
         ips = r.images_per_sec
         shares.append(ips / t.weight)
         lat = r.latency_ms()
@@ -136,6 +177,9 @@ def fairness_report(shared: SharedAllocation, results: list[FabricResult]) -> di
             "latency_ms_p99": lat.p99,
             "mean_utilization": r.mean_utilization,
         }
+        if pl is not None:
+            per[t.name]["max_stage_transfer_cycles"] = pl.max_stage_transfer
+            per[t.name]["chips"] = np.flatnonzero(pl.chip_arrays > 0).tolist()
     shares = np.asarray(shares)
     return {
         "tenants": per,

@@ -44,7 +44,7 @@ from ..core.cim.network import NetworkSpec
 from ..core.cim.profile import NetworkProfile
 from ..core.cim.simulate import Allocation, CLOCK_HZ, _layer_patch_cycles
 from .arrivals import ArrivalProcess, ClosedLoop, PoissonOpen, arrival_times
-from .metrics import LatencyStats, latency_stats, steady_throughput
+from .metrics import LatencyStats, latency_stats, percentile_kernel, steady_throughput
 
 __all__ = [
     "dispatch_step",
@@ -104,10 +104,14 @@ def pool_dispatch(xp, scan, free, t_ready, svc, b_mask):
     return free, done
 
 
-def _request_step(xp, job_scan, stages, concurrency, carry, inp):
+def _request_step(xp, job_scan, stages, xfer, concurrency, carry, inp):
     """Run one request through every stage against the carried pool state.
 
     ``stages``: sequence of (cycles (S, B), b_mask (B,)) per layer;
+    ``xfer``: (L,) per-stage entry transfer delay (multi-chip placement), or
+    None for the flat fabric — when present, the request's clock advances by
+    ``xfer[l]`` before stage ``l`` dispatches, the identical IEEE add the
+    event engine performs in ``FabricSim._dispatch_stage``;
     ``carry``: (per-layer free tensors, completion ring buffer);
     ``inp``: (request index, open-loop arrival time, per-layer (P,) sample
     indices).  Closed loop (``concurrency`` not None) reads the arrival from
@@ -123,7 +127,9 @@ def _request_step(xp, job_scan, stages, concurrency, carry, inp):
         t = ring[pos]
     t0 = t
     new_frees = []
-    for (cycles, b_mask), free, ix in zip(stages, frees, idx):
+    for li, ((cycles, b_mask), free, ix) in enumerate(zip(stages, frees, idx)):
+        if xfer is not None:
+            t = t + xfer[li]
         svc = cycles[ix]  # (P, B) this request's sampled per-block cycles
         free, t = pool_dispatch(xp, job_scan, free, t, svc, b_mask)
         new_frees.append(free)
@@ -133,20 +139,22 @@ def _request_step(xp, job_scan, stages, concurrency, carry, inp):
 
 
 def run_fabric_kernel(
-    xp, scan, stages, frees, arrivals, idx, concurrency, percentiles, job_scan=None
+    xp, scan, stages, frees, arrivals, idx, concurrency, percentiles,
+    job_scan=None, xfer=None,
 ):
     """Whole-run recurrence: scan ``_request_step`` over requests, then
     reduce per-request latencies to percentiles — one fused computation in
     the jax path, a plain loop in the numpy path.  ``job_scan`` (defaults to
-    ``scan``) drives the inner per-job loop."""
+    ``scan``) drives the inner per-job loop; ``xfer`` is this config's (L,)
+    stage transfer vector (or None for the flat fabric)."""
     n = arrivals.shape[0]
     ring = xp.zeros(concurrency if concurrency is not None else 1)
     from functools import partial
 
-    body = partial(_request_step, xp, job_scan or scan, stages, concurrency)
+    body = partial(_request_step, xp, job_scan or scan, stages, xfer, concurrency)
     (_, _), (t_arr, comp) = scan(body, (frees, ring), (xp.arange(n), arrivals, idx))
     lat = comp - t_arr
-    pct = xp.percentile(lat, xp.asarray(percentiles))
+    pct = percentile_kernel(xp, lat, percentiles)
     return t_arr, comp, pct
 
 
@@ -201,6 +209,7 @@ class _GroupPack:
     zskip: bool
     stages: tuple  # per layer (cycles (S, B) float64, b_mask (B,) bool)
     frees: tuple  # per layer (C, B, D) float64 initial free-times
+    xfer: np.ndarray | None = None  # (C, L) per-stage entry transfers
 
 
 def _pack_group(
@@ -342,7 +351,7 @@ class VirtualTimeFabric:
         self._compiled: dict[tuple, object] = {}
 
     # ------------------------------------------------------------- internals
-    def _groups(self, allocs) -> list[_GroupPack]:
+    def _groups(self, allocs, placements=None) -> list[_GroupPack]:
         keys: dict[tuple, list[int]] = {}
         for j, a in enumerate(allocs):
             keys.setdefault((a.layer_dups is not None, a.policy != "baseline"), []).append(j)
@@ -354,11 +363,28 @@ class VirtualTimeFabric:
                     [allocs[j] for j in sub],
                     lane_quantum=self.lane_quantum,
                 )
-                out.append(_GroupPack(np.asarray(sub), layerwise, zskip, stages, frees))
+                xfer = (
+                    None
+                    if placements is None
+                    else np.ascontiguousarray(
+                        np.stack(
+                            [
+                                np.asarray(
+                                    placements[j].stage_transfer, dtype=np.float64
+                                )
+                                for j in sub
+                            ]
+                        )
+                    )
+                )
+                out.append(
+                    _GroupPack(np.asarray(sub), layerwise, zskip, stages, frees, xfer)
+                )
         return out
 
     def _jax_runner(self, g: _GroupPack, concurrency, n, percentiles):
         """Cached jit(vmap) of the shared kernel for one group structure."""
+        has_xfer = g.xfer is not None
         key = (
             g.layerwise,
             g.zskip,
@@ -366,6 +392,7 @@ class VirtualTimeFabric:
             n,
             percentiles,
             tuple(f.shape[1:] for f in g.frees),
+            has_xfer,
         )
         if key not in self._compiled:
             import functools
@@ -376,7 +403,7 @@ class VirtualTimeFabric:
             np_stages = g.stages
             job_scan = functools.partial(jax.lax.scan, unroll=1)
 
-            def one(frees, arrivals, idx):
+            def one(frees, xfer, arrivals, idx):
                 # convert the cycle constants INSIDE the traced function:
                 # tracing happens under enable_x64(), so the float64 values
                 # survive (a module-level jnp.asarray would downcast to f32
@@ -386,10 +413,12 @@ class VirtualTimeFabric:
                 )
                 return run_fabric_kernel(
                     jnp, jax.lax.scan, stages, frees, arrivals, idx,
-                    concurrency, percentiles, job_scan=job_scan,
+                    concurrency, percentiles, job_scan=job_scan, xfer=xfer,
                 )
 
-            self._compiled[key] = jax.jit(jax.vmap(one, in_axes=(0, 0, None)))
+            self._compiled[key] = jax.jit(
+                jax.vmap(one, in_axes=(0, 0 if has_xfer else None, 0, None))
+            )
         return self._compiled[key]
 
     # ------------------------------------------------------------------ run
@@ -401,16 +430,26 @@ class VirtualTimeFabric:
         seed: int = 0,
         engine: str = "jax",
         percentiles: tuple = (50.0, 95.0, 99.0),
+        placements: list | None = None,
     ) -> VTResult:
         """Evaluate C allocations against one shared arrival process (or a
         per-allocation list of same-kind processes).  Service times are
         sampled once with ``default_rng(seed)`` — the same draws every
-        ``FabricSim(spec, prof, alloc, seed=seed)`` would consume."""
+        ``FabricSim(spec, prof, alloc, seed=seed)`` would consume.
+
+        ``placements`` (one ``core.cim.topology.Placement`` per allocation,
+        or None for the flat fabric) adds each config's per-stage entry
+        transfer delays to the kernel — the multi-chip path, bit-identical
+        to ``FabricSim(placement=...)``."""
         if engine not in ("jax", "numpy"):
             raise ValueError(f"engine must be 'jax' or 'numpy', got {engine!r}")
         allocs = list(allocs)
         if not allocs:
             raise ValueError("need at least one allocation")
+        if placements is not None and len(placements) != len(allocs):
+            raise ValueError(
+                f"{len(placements)} placements for {len(allocs)} allocations"
+            )
         procs = proc if isinstance(proc, list) else [proc] * len(allocs)
         if len(procs) != len(allocs):
             raise ValueError(f"{len(procs)} arrival processes for {len(allocs)} allocations")
@@ -445,13 +484,13 @@ class VirtualTimeFabric:
         pcts = np.zeros((C, len(percentiles)))
         if n == 0:
             return VTResult(arrivals, completions, pcts, tuple(percentiles), self.clock_hz)
-        for g in self._groups(allocs):
+        for g in self._groups(allocs, placements):
             if engine == "jax":
                 from jax.experimental import enable_x64
 
                 fn = self._jax_runner(g, concurrency, n, tuple(percentiles))
                 with enable_x64():
-                    t_arr, comp, pct = fn(g.frees, times[g.rows], tuple(idx))
+                    t_arr, comp, pct = fn(g.frees, g.xfer, times[g.rows], tuple(idx))
                 t_arr, comp, pct = np.asarray(t_arr), np.asarray(comp), np.asarray(pct)
             else:
                 t_arr = np.zeros((len(g.rows), n))
@@ -462,6 +501,7 @@ class VirtualTimeFabric:
                     a, c, p = run_fabric_kernel(
                         np, _np_scan, g.stages, frees, times[row],
                         tuple(idx), concurrency, tuple(percentiles),
+                        xfer=None if g.xfer is None else g.xfer[k],
                     )
                     t_arr[k], comp[k], pct[k] = a, c, p
             arrivals[g.rows] = t_arr

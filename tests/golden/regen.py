@@ -1,9 +1,18 @@
-"""Regenerate the pinned scalar-simulator fixtures in tests/golden/.
+"""Regenerate the pinned fixtures in tests/golden/.
 
-The fixtures pin ``allocate()``/``simulate()`` outputs (float64, all 5
-policies, 2 design sizes per network) so refactors of the simulator core are
-provably behavior-preserving (tests/test_golden_equivalence.py).  Only
-re-run this after an INTENTIONAL behavior change, and say so in the commit:
+Two fixture families:
+
+  * ``<net>_scalar.json`` — ``allocate()``/``simulate()`` outputs (float64,
+    all 5 policies, 2 design sizes per network), pinned by
+    tests/test_golden_equivalence.py.
+  * ``<net>_fabric_scalar.json`` — ``FabricSim`` per-request percentiles and
+    completion-time digests for ``blockwise`` + ``latency_aware`` under a
+    fixed Poisson trace, pinned by tests/test_topology.py: the single-chip
+    placed path must reproduce them BIT-IDENTICALLY (they were generated at
+    the pre-refactor commit, before placements existed).
+
+Only re-run this after an INTENTIONAL behavior change, and say so in the
+commit:
 
   PYTHONPATH=src python tests/golden/regen.py
 """
@@ -13,6 +22,8 @@ from __future__ import annotations
 import json
 import pathlib
 
+import numpy as np
+
 from repro.core.cim import (
     POLICIES,
     allocate,
@@ -21,13 +32,61 @@ from repro.core.cim import (
     simulate,
     vgg11_cifar10,
 )
+from repro.core.cim.simulate import CLOCK_HZ
+from repro.fabric import FabricSim, PoissonOpen
 
 HERE = pathlib.Path(__file__).parent
 SIM_IMAGES = 64
+FABRIC_REQUESTS = 120
+FABRIC_ARRIVAL_SEED = 7
+FABRIC_SERVICE_SEED = 3
 CONFIGS = {
     "resnet18": (resnet18_imagenet, {"n_images": 1, "sample_patches": 128}),
     "vgg11": (vgg11_cifar10, {"n_images": 2, "sample_patches": 128}),
 }
+
+
+def regen_fabric(name, spec, prof, prof_kw) -> None:
+    pes = spec.min_pes() * 2
+    bw = allocate(spec, prof, "blockwise", pes)
+    cap = simulate(spec, prof, bw, n_images=SIM_IMAGES).images_per_sec
+    la = allocate(spec, prof, "latency_aware", pes, offered_ips=0.6 * cap)
+    results = []
+    for pol, a in (("blockwise", bw), ("latency_aware", la)):
+        proc = PoissonOpen(
+            FABRIC_REQUESTS, 0.6 * cap / CLOCK_HZ, seed=FABRIC_ARRIVAL_SEED
+        )
+        r = FabricSim(spec, prof, a, seed=FABRIC_SERVICE_SEED).run(proc)
+        pct = np.percentile(r.latencies, [50.0, 95.0, 99.0])
+        results.append(
+            {
+                "policy": pol,
+                "n_pes": pes,
+                "arrays_used": a.arrays_used,
+                "block_dups": [d.tolist() for d in a.block_dups],
+                "offered_ips": 0.6 * cap,
+                "percentiles": pct.tolist(),
+                "completions_head": r.completions[:5].tolist(),
+                "completions_tail": r.completions[-5:].tolist(),
+                "completions_sum": float(r.completions.sum()),
+            }
+        )
+    out = HERE / f"{name}_fabric_scalar.json"
+    out.write_text(
+        json.dumps(
+            {
+                "network": name,
+                "profile_params": prof_kw,
+                "n_requests": FABRIC_REQUESTS,
+                "arrival_seed": FABRIC_ARRIVAL_SEED,
+                "service_seed": FABRIC_SERVICE_SEED,
+                "results": results,
+            },
+            indent=1,
+        )
+        + "\n"
+    )
+    print(f"wrote {out} ({len(results)} pinned fabric configs)")
 
 
 def main() -> None:
@@ -66,6 +125,7 @@ def main() -> None:
             + "\n"
         )
         print(f"wrote {out} ({len(results)} pinned configs)")
+        regen_fabric(name, spec, prof, prof_kw)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,110 @@
+"""Hypothesis round-trips for the design-space configuration records.
+
+Geometry sweeps build variants with ``ArrayConfig.variant(...)`` and retile
+networks with ``with_array``; a field silently dropped by either (the
+classic frozen-dataclass ``replace`` pitfall when a field is renamed or
+computed) would make every sweep over that axis a silent no-op.  These
+properties draw random field assignments — including the PR-4 topology
+fields (``noc_hop_cycles``, ``noc_flit_bytes``) — and assert every field
+round-trips through variant construction, network retargeting, and
+profile-cache keying.  Same for ``FabricTopology.variant``.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep: pip install .[dev]
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cim import DEFAULT_ARRAY, FabricTopology, vgg11_cifar10, with_array
+from repro.core.cim.cost import ArrayConfig
+
+ARRAY_FIELDS = {
+    "rows": st.sampled_from([64, 128, 256]),
+    "cols": st.sampled_from([64, 128, 256]),
+    "cell_bits": st.sampled_from([1, 2]),
+    "weight_bits": st.sampled_from([4, 8]),
+    "input_bits": st.sampled_from([4, 8]),
+    "adc_bits": st.integers(1, 4),
+    "adc_share": st.sampled_from([4, 8, 16]),
+    "noc_hop_cycles": st.integers(1, 8),
+    "noc_flit_bytes": st.sampled_from([8, 16, 32]),
+}
+
+
+@st.composite
+def array_changes(draw):
+    names = draw(
+        st.lists(st.sampled_from(sorted(ARRAY_FIELDS)), min_size=1, unique=True)
+    )
+    return {n: draw(ARRAY_FIELDS[n]) for n in names}
+
+
+@given(array_changes())
+@settings(max_examples=40, deadline=None)
+def test_array_variant_roundtrip(changes):
+    """Every changed field lands; every untouched field keeps its default —
+    no silent drops through the variant constructor."""
+    arr = DEFAULT_ARRAY.variant(**changes)
+    for f in dataclasses.fields(ArrayConfig):
+        expect = changes.get(f.name, getattr(DEFAULT_ARRAY, f.name))
+        assert getattr(arr, f.name) == expect, f.name
+    # frozen+eq: the variant keys caches distinctly from the default iff
+    # something actually changed
+    assert (arr == DEFAULT_ARRAY) == all(
+        changes[k] == getattr(DEFAULT_ARRAY, k) for k in changes
+    )
+    # round-trip again through an identity variant
+    assert arr.variant() == arr
+
+
+@given(array_changes())
+@settings(max_examples=15, deadline=None)
+def test_with_array_carries_every_field(changes):
+    """Retiling a network must propagate the FULL ArrayConfig to every
+    layer — topology fields included, so multi-chip cost models derived
+    from the layer's array see the swept values."""
+    arr = DEFAULT_ARRAY.variant(**changes)
+    spec = with_array(vgg11_cifar10(), arr)
+    for layer in spec.layers:
+        assert layer.array == arr
+        for f in dataclasses.fields(ArrayConfig):
+            assert getattr(layer.array, f.name) == getattr(arr, f.name), f.name
+    # the lowered matrix is array-independent; the tiling re-derives
+    assert spec.layers[0].rows == vgg11_cifar10().layers[0].rows
+
+
+TOPO_FIELDS = {
+    "n_chips": st.sampled_from([1, 2, 4, 8]),
+    "pes_per_chip": st.integers(1, 64),
+    "arrays_per_pe": st.sampled_from([32, 64, 128]),
+    "link_gbps": st.sampled_from([8.0, 32.0, 128.0]),
+}
+
+
+@st.composite
+def topo_changes(draw):
+    names = draw(
+        st.lists(st.sampled_from(sorted(TOPO_FIELDS)), min_size=1, unique=True)
+    )
+    return {n: draw(TOPO_FIELDS[n]) for n in names}
+
+
+@given(topo_changes(), array_changes())
+@settings(max_examples=40, deadline=None)
+def test_topology_variant_roundtrip(changes, arr_changes):
+    base = FabricTopology(pes_per_chip=16)
+    topo = base.variant(**changes, array=DEFAULT_ARRAY.variant(**arr_changes))
+    for f in dataclasses.fields(FabricTopology):
+        if f.name == "array":
+            continue
+        expect = changes.get(f.name, getattr(base, f.name))
+        assert getattr(topo, f.name) == expect, f.name
+    # derived capacities follow the varied fields
+    assert topo.total_arrays == topo.n_chips * topo.pes_per_chip * topo.arrays_per_pe
+    # the cost model re-derives from the varied ArrayConfig
+    assert topo.hop_latency_cycles == topo.array.noc_hop_cycles * int(
+        np.ceil(np.sqrt(topo.pes_per_chip))
+    )

@@ -1,0 +1,134 @@
+"""Multi-chip DSE sweep: chips x link-bandwidth grid, Pareto frontier over
+(throughput, p99, chips), sharded batched evaluation, and topology-aware
+tenancy placement."""
+
+import numpy as np
+import pytest
+
+from repro.core.cim import FabricTopology, profile_network, vgg11_cifar10
+from repro.dse import (
+    MULTICHIP_OBJECTIVES,
+    chip_grid,
+    clear_caches,
+    pareto_frontier,
+    run_multichip_sweep,
+    run_sweep,
+    design_grid,
+)
+from repro.fabric import ClosedLoop, Tenant, allocate_shared, fairness_report, run_tenants
+
+
+@pytest.fixture(scope="module")
+def small_sweep():
+    pts = chip_grid(
+        networks=("vgg11",), chips=(1, 2, 4), link_gbps=(16.0, 256.0),
+        pe_multiplier=2.0,
+    )
+    res = run_multichip_sweep(
+        pts, n_requests=40, closed_requests=30, concurrency=12,
+        sample_patches=64, engine="numpy",
+    )
+    return pts, res
+
+
+def test_chip_grid_fixes_total_silicon():
+    pts = chip_grid(networks=("vgg11",), chips=(1, 2, 4), link_gbps=(16.0,))
+    totals = {p.n_pes_total for p in pts}
+    assert len(totals) == 1  # equal-silicon comparison
+    (total,) = totals
+    for p in pts:
+        assert total % p.n_chips == 0
+
+
+def test_multichip_sweep_columns(small_sweep):
+    pts, res = small_sweep
+    assert len(res) == len(pts)
+    assert np.all(np.isfinite(res.images_per_sec))
+    assert np.all(res.images_per_sec > 0)
+    assert np.all(res.p99_cycles >= res.p50_cycles)
+    rows = {(p.n_chips, p.link_gbps): i for i, p in enumerate(res.points)}
+    # single chip: no transfers, identical across link bandwidths
+    for g in (16.0, 256.0):
+        i = rows[(1, g)]
+        assert res.max_stage_transfer[i] == 0.0
+        assert res.n_crossings[i] == 0
+    assert res.p99_cycles[rows[(1, 16.0)]] == res.p99_cycles[rows[(1, 256.0)]]
+    # more chips at the same link never reduces the worst transfer
+    assert (
+        res.max_stage_transfer[rows[(4, 16.0)]]
+        >= res.max_stage_transfer[rows[(2, 16.0)]]
+    )
+    # faster links strictly shrink the transfer at fixed chips
+    assert (
+        res.max_stage_transfer[rows[(4, 256.0)]]
+        < res.max_stage_transfer[rows[(4, 16.0)]]
+    )
+
+
+def test_multichip_pareto_frontier(small_sweep):
+    pts, res = small_sweep
+    idx = pareto_frontier(res, MULTICHIP_OBJECTIVES)
+    assert len(idx) >= 1
+    # the single-chip point dominates on p99 and chips at equal silicon, so
+    # the frontier must include a 1-chip design
+    assert any(res.points[i].n_chips == 1 for i in idx)
+    # rows() serializes every point
+    rows = res.rows()
+    assert len(rows) == len(pts)
+    assert {"n_chips", "link_gbps", "images_per_sec", "p99_ms"} <= set(rows[0])
+
+
+def test_sharded_sweep_identical_to_plain():
+    """shard_devices=True routes the batched evaluation through
+    distrib.sharding.shard_map_batch — identical numbers."""
+    clear_caches()
+    pts = design_grid(networks=("vgg11",), pe_multipliers=(1.0, 1.7, 2.0))
+    a = run_sweep(pts, sample_patches=48)
+    b = run_sweep(pts, sample_patches=48, shard_devices=True)
+    np.testing.assert_array_equal(a.images_per_sec, b.images_per_sec)
+    np.testing.assert_array_equal(a.total_cycles, b.total_cycles)
+    np.testing.assert_array_equal(a.arrays_used, b.arrays_used)
+
+
+def test_shard_map_batch_pads_odd_batches():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.distrib.sharding import shard_map_batch
+
+    fn = shard_map_batch(jax.vmap(lambda x: (x * 2.0, x.sum())))
+    x = np.arange(15.0).reshape(5, 3)  # 5 rows: not a multiple of anything even
+    y, s = fn(x)
+    np.testing.assert_allclose(np.asarray(y), x * 2.0)
+    np.testing.assert_allclose(np.asarray(s), x.sum(axis=1))
+
+
+# ------------------------------------------------------- tenancy placement
+def test_tenancy_topology_placement():
+    spec = vgg11_cifar10()
+    prof = profile_network(spec, n_images=1, sample_patches=64)
+    tenants = [
+        Tenant("prio", spec, prof, weight=2.0),
+        Tenant("batch", spec, prof, weight=1.0),
+    ]
+    n_pes = -(-2 * spec.n_arrays // 64) * 2
+    n_pes += (-n_pes) % 2
+    flat = allocate_shared(tenants, n_pes=n_pes)
+    topo = FabricTopology.split(2, n_pes, link_gbps=32.0)
+    shared = allocate_shared(tenants, n_pes=n_pes, topology=topo)
+    # counts are the flat weighted-fair greedy's, topology or not
+    for a, b in zip(flat.allocations, shared.allocations):
+        for x, y in zip(a.block_dups, b.block_dups):
+            np.testing.assert_array_equal(x, y)
+    assert shared.placements is not None and len(shared.placements) == 2
+    # tenants share the tree without oversubscribing any chip
+    load = sum(p.chip_arrays for p in shared.placements)
+    assert np.all(load <= topo.arrays_per_chip)
+    # placements flow into the simulations + report
+    results = run_tenants(shared, [ClosedLoop(20, 8), ClosedLoop(20, 8)], seed=0)
+    rep = fairness_report(shared, results)
+    for d in rep["tenants"].values():
+        assert "max_stage_transfer_cycles" in d and "chips" in d
+    # budget mismatch is rejected
+    with pytest.raises(ValueError):
+        allocate_shared(tenants, n_pes=n_pes, topology=FabricTopology.split(2, n_pes + 2))
