@@ -9,8 +9,10 @@ are extracted from each mode's ``rows``:
 
   * ``us_per_call`` (lower is better) — skipped when the baseline is 0
     (modes that report a pure derived metric).
-  * ``speedup=<x>x`` parsed from ``derived`` (higher is better) — the
-    batch-vs-scalar acceptance numbers (fabric_tail, dse).
+  * ``speedup=<x>x`` / ``speedup_<n>geo=<x>x`` parsed from ``derived``
+    (higher is better) — the batch-vs-scalar acceptance numbers
+    (fabric_tail, dse, and the profiling engine's multi-geometry
+    ``profile`` headline).
 
 A metric FAILS when it is worse than baseline by more than ``--tolerance``
 (default 10%).  Shared-runner wall-clock is noisy, so the default checks

@@ -87,44 +87,52 @@ class ArrayConfig:
 DEFAULT_ARRAY = ArrayConfig()
 
 
-def bitplane_ones(patches_u8: np.ndarray) -> np.ndarray:
+def bitplane_ones(patches_u8, xp=np):
     """Count '1' bits per bit-plane for each patch row-slice.
 
     Args:
       patches_u8: uint8 array (..., rows) of quantized input values that are
         applied to the word lines of one crossbar array.
+      xp: array module — ``numpy`` (default) or ``jax.numpy``; the jax path
+        is trace-safe so the same code runs inside jit'd profiling kernels.
 
     Returns:
-      int array (..., input_bits) — number of active rows per bit-plane.
+      int array (..., input_bits) — number of active rows per bit-plane,
+      plane 0 = MSB (the ``np.unpackbits`` bit order).
     """
     if patches_u8.dtype != np.uint8:
         raise TypeError(f"expected uint8, got {patches_u8.dtype}")
-    # unpackbits along a fresh trailing axis: (..., rows, 8); plane 0 = MSB.
-    bits = np.unpackbits(patches_u8[..., None], axis=-1)
-    return bits.sum(axis=-2, dtype=np.int64)
+    if xp is np:
+        # unpackbits along a fresh trailing axis: (..., rows, 8); plane 0 = MSB.
+        bits = np.unpackbits(patches_u8[..., None], axis=-1)
+        return bits.sum(axis=-2, dtype=np.int64)
+    # shift-and-mask popcount — jnp has no unpackbits; identical integers
+    planes = [
+        ((patches_u8 >> (7 - p)) & 1).sum(axis=-1, dtype=xp.int32)
+        for p in range(8)
+    ]
+    return xp.stack(planes, axis=-1)
 
 
-def zskip_cycles_from_ones(
-    ones: np.ndarray, cfg: ArrayConfig = DEFAULT_ARRAY
-) -> np.ndarray:
+def zskip_cycles_from_ones(ones, cfg: ArrayConfig = DEFAULT_ARRAY, xp=np):
     """Cycles given per-bit-plane active-row counts (..., input_bits).
 
     Split out of ``zskip_cycles`` so ADC-precision sweeps can re-cost cached
-    bit statistics without re-running the network forward pass.
+    bit statistics without re-running the network forward pass.  Pure array
+    algebra over ``xp`` — shared verbatim between the numpy profiler
+    derivation and jax/Pallas paths.
     """
-    reads = np.maximum(1, -(-np.asarray(ones) // cfg.rows_per_read))
+    reads = xp.maximum(1, -(-xp.asarray(ones) // cfg.rows_per_read))
     return cfg.cycles_per_read * reads.sum(axis=-1)
 
 
-def zskip_cycles(
-    patches_u8: np.ndarray, cfg: ArrayConfig = DEFAULT_ARRAY
-) -> np.ndarray:
+def zskip_cycles(patches_u8, cfg: ArrayConfig = DEFAULT_ARRAY, xp=np):
     """Cycles for one array to run a dot product against each input patch.
 
     patches_u8: (..., rows) uint8 — rows <= cfg.rows.
-    Returns: (...) int64 cycles.
+    Returns: (...) int cycles.
     """
-    return zskip_cycles_from_ones(bitplane_ones(patches_u8), cfg)
+    return zskip_cycles_from_ones(bitplane_ones(patches_u8, xp=xp), cfg, xp=xp)
 
 
 def baseline_cycles(

@@ -27,6 +27,7 @@ from .sweep import (
     chip_grid,
     clear_caches,
     design_grid,
+    get_captured,
     get_profiled,
     run_multichip_sweep,
     run_sweep,
@@ -50,6 +51,7 @@ __all__ = [
     "chip_grid",
     "clear_caches",
     "design_grid",
+    "get_captured",
     "get_profiled",
     "run_multichip_sweep",
     "run_sweep",

@@ -1,14 +1,17 @@
 """Cartesian design-space sweeps (array geometry x ADC x PE count x policy
-x network) with profile caching.
+x network) with two-level profile caching.
 
-Profiling is the expensive, config-independent step (a quantized forward
-pass per (network, ArrayConfig) pair — see profile.py), so profiles are
-cached keyed on the array config + profile parameters and shared between the
-batched and scalar engines.  ``run_sweep`` groups points by (network, array)
-— every group shares one packed-profile ``BatchSimulator`` — and evaluates
-each group with two jit calls; ``engine="scalar"`` runs the identical points
-through the per-config ``allocate``/``simulate`` loop (the pre-refactor
-path) for equivalence checks and speedup measurement.
+Profiling splits into a geometry-INDEPENDENT capture (the jit quantized
+forward — see profile.py) and a cheap per-geometry derivation, so the cache
+is split the same way: ``get_captured`` caches activations keyed on
+(network, profile_images, sample_patches, seed), and ``get_profiled``
+derives per-``ArrayConfig`` ``LayerProfile`` views from that shared capture
+— a geometry x ADC sweep runs the network forward exactly once.
+``run_sweep`` groups points by (network, array) — every group shares one
+packed-profile ``BatchSimulator`` — and evaluates each group with two jit
+calls; ``engine="scalar"`` runs the identical points through the per-config
+``allocate``/``simulate`` loop (the pre-refactor path) for equivalence
+checks and speedup measurement.
 """
 
 from __future__ import annotations
@@ -20,7 +23,12 @@ import numpy as np
 
 from ..core.cim.cost import ArrayConfig, DEFAULT_ARRAY
 from ..core.cim.network import NetworkSpec, resnet18_imagenet, vgg11_cifar10, with_array
-from ..core.cim.profile import NetworkProfile, profile_network
+from ..core.cim.profile import (
+    ActivationCapture,
+    NetworkProfile,
+    capture_activations,
+    derive_profile,
+)
 from ..core.cim.simulate import (
     ARRAYS_PER_PE,
     CLOCK_HZ,
@@ -42,11 +50,13 @@ __all__ = [
     "design_grid",
     "run_multichip_sweep",
     "run_sweep",
+    "get_captured",
     "get_profiled",
     "clear_caches",
 ]
 
 _SPEC_FNS = {"resnet18": resnet18_imagenet, "vgg11": vgg11_cifar10}
+_CAPTURE_CACHE: dict[tuple, ActivationCapture] = {}
 _PROFILE_CACHE: dict[tuple, tuple[NetworkSpec, NetworkProfile]] = {}
 _SIMULATOR_CACHE: dict[tuple, BatchSimulator] = {}
 _VT_CACHE: dict[tuple, object] = {}  # VirtualTimeFabric per profiled group
@@ -146,6 +156,29 @@ def _spec_for(network: str, array: ArrayConfig) -> NetworkSpec:
     return with_array(_SPEC_FNS[network](), array)
 
 
+def get_captured(
+    network: str,
+    *,
+    profile_images: int = 1,
+    sample_patches: int = 128,
+    seed: int = 0,
+) -> ActivationCapture:
+    """Cached geometry-independent activation capture — ONE quantized
+    forward per (network, images, sample, seed), shared by every
+    ``ArrayConfig`` variant a sweep derives profiles for."""
+    if network not in _SPEC_FNS:
+        raise ValueError(f"unknown network {network!r}; choose from {sorted(_SPEC_FNS)}")
+    key = (network, profile_images, sample_patches, seed)
+    if key not in _CAPTURE_CACHE:
+        _CAPTURE_CACHE[key] = capture_activations(
+            _SPEC_FNS[network](),
+            n_images=profile_images,
+            sample_patches=sample_patches,
+            seed=seed,
+        )
+    return _CAPTURE_CACHE[key]
+
+
 def get_profiled(
     network: str,
     array: ArrayConfig = DEFAULT_ARRAY,
@@ -154,19 +187,25 @@ def get_profiled(
     sample_patches: int = 128,
     seed: int = 0,
 ) -> tuple[NetworkSpec, NetworkProfile]:
-    """Cached (spec, profile) for a (network, array-config) pair."""
+    """Cached (spec, profile) for a (network, array-config) pair — a cheap
+    derived view over the shared ``get_captured`` activations, so geometry
+    sweeps never re-run the forward pass."""
     _spec_for(network, array)  # validate the name before the cache lookup
     key = (network, array, profile_images, sample_patches, seed)
     if key not in _PROFILE_CACHE:
-        spec = _spec_for(network, array)
-        prof = profile_network(
-            spec, n_images=profile_images, sample_patches=sample_patches, seed=seed
+        cap = get_captured(
+            network,
+            profile_images=profile_images,
+            sample_patches=sample_patches,
+            seed=seed,
         )
-        _PROFILE_CACHE[key] = (spec, prof)
+        spec = _spec_for(network, array)
+        _PROFILE_CACHE[key] = (spec, derive_profile(cap, spec, array=array))
     return _PROFILE_CACHE[key]
 
 
 def clear_caches() -> None:
+    _CAPTURE_CACHE.clear()
     _PROFILE_CACHE.clear()
     _SIMULATOR_CACHE.clear()
     _VT_CACHE.clear()

@@ -1,6 +1,15 @@
 """Pallas TPU kernels (validated on CPU via interpret=True)."""
 from . import ops, ref
+from .bitplane_profile import bitplane_block_profile, bitplane_profile
 from .flash_attention import flash_attention
 from .ssd_scan import ssd_chunk
 from .zskip_matmul import zskip_matmul
-__all__ = ["ops", "ref", "flash_attention", "ssd_chunk", "zskip_matmul"]
+__all__ = [
+    "ops",
+    "ref",
+    "bitplane_block_profile",
+    "bitplane_profile",
+    "flash_attention",
+    "ssd_chunk",
+    "zskip_matmul",
+]

@@ -22,3 +22,37 @@ def pytest_collection_modifyitems(config, items):
             v in SLOW_ARCHES for v in callspec.params.values() if isinstance(v, str)
         ):
             item.add_marker(pytest.mark.slow)
+
+
+# ------------------------------------------------------ shared CIM profiles
+# Profiling runs a quantized network forward; before this cache nearly every
+# CIM/fabric test module re-ran it for the same (network, images, sample)
+# parameters.  Modules take the session-scoped ``profiled`` factory instead,
+# so each distinct parameter set is captured exactly once per test session.
+_PROFILED_CACHE: dict = {}
+
+
+@pytest.fixture(scope="session")
+def profiled():
+    """Factory: ``profiled(network, n_images=1, sample_patches=128)`` ->
+    (spec, NetworkProfile), cached across all test modules."""
+    from repro.core.cim import profile_network, resnet18_imagenet, vgg11_cifar10
+
+    spec_fns = {"resnet18": resnet18_imagenet, "vgg11": vgg11_cifar10}
+
+    def get(network: str, n_images: int = 1, sample_patches: int = 128, seed: int = 0):
+        key = (network, n_images, sample_patches, seed)
+        if key not in _PROFILED_CACHE:
+            spec = spec_fns[network]()
+            _PROFILED_CACHE[key] = (
+                spec,
+                profile_network(
+                    spec,
+                    n_images=n_images,
+                    sample_patches=sample_patches,
+                    seed=seed,
+                ),
+            )
+        return _PROFILED_CACHE[key]
+
+    return get

@@ -1,6 +1,6 @@
 """Regenerate the pinned fixtures in tests/golden/.
 
-Two fixture families:
+Three fixture families:
 
   * ``<net>_scalar.json`` — ``allocate()``/``simulate()`` outputs (float64,
     all 5 policies, 2 design sizes per network), pinned by
@@ -8,8 +8,15 @@ Two fixture families:
   * ``<net>_fabric_scalar.json`` — ``FabricSim`` per-request percentiles and
     completion-time digests for ``blockwise`` + ``latency_aware`` under a
     fixed Poisson trace, pinned by tests/test_topology.py: the single-chip
-    placed path must reproduce them BIT-IDENTICALLY (they were generated at
-    the pre-refactor commit, before placements existed).
+    placed path must reproduce them BIT-IDENTICALLY.  The vgg11 fixture
+    still dates from the pre-placement commit (the jit profiling forward
+    left vgg11 profiles bit-identical); the resnet18 fixture was re-pinned
+    at the profiling-engine commit, where resnet18 profile numerics shifted.
+  * ``<net>_profile.json`` — the scalar ``"reference"`` profiling engine's
+    ``LayerProfile`` statistics (exact float densities + a sha256 digest of
+    the integer cycle samples), pinned by tests/test_profile_engines.py:
+    the vectorized and Pallas bit-plane engines must reproduce them BIT-
+    IDENTICALLY from one shared activation capture.
 
 Only re-run this after an INTENTIONAL behavior change, and say so in the
 commit:
@@ -19,6 +26,7 @@ commit:
 
 from __future__ import annotations
 
+import hashlib
 import json
 import pathlib
 
@@ -27,6 +35,8 @@ import numpy as np
 from repro.core.cim import (
     POLICIES,
     allocate,
+    capture_activations,
+    derive_profile,
     profile_network,
     resnet18_imagenet,
     simulate,
@@ -89,6 +99,48 @@ def regen_fabric(name, spec, prof, prof_kw) -> None:
     print(f"wrote {out} ({len(results)} pinned fabric configs)")
 
 
+def cycles_digest(cycles_sample: np.ndarray) -> str:
+    """Platform-independent digest of the integer (S, B) cycle sample."""
+    return hashlib.sha256(
+        np.ascontiguousarray(cycles_sample.astype("<i8")).tobytes()
+    ).hexdigest()
+
+
+def regen_profile(name, spec, prof_kw) -> None:
+    cap = capture_activations(
+        spec, n_images=prof_kw["n_images"], sample_patches=prof_kw["sample_patches"]
+    )
+    prof = derive_profile(cap, spec, engine="reference")
+    layers = [
+        {
+            "name": lp.name,
+            "patches_per_image": lp.patches_per_image,
+            # json round-trips python floats via repr: exact float64
+            "block_density": lp.block_density.tolist(),
+            "mean_cycles": lp.mean_cycles.tolist(),
+            "baseline_block_cycles": lp.baseline_block_cycles.tolist(),
+            "cycles_sample_shape": list(lp.cycles_sample.shape),
+            "cycles_sample_sum": int(lp.cycles_sample.sum()),
+            "cycles_sample_sha256": cycles_digest(lp.cycles_sample),
+        }
+        for lp in prof.layers
+    ]
+    out = HERE / f"{name}_profile.json"
+    out.write_text(
+        json.dumps(
+            {
+                "network": name,
+                "profile_params": prof_kw,
+                "engine": "reference",
+                "layers": layers,
+            },
+            indent=1,
+        )
+        + "\n"
+    )
+    print(f"wrote {out} ({len(layers)} pinned layer profiles)")
+
+
 def main() -> None:
     for name, (spec_fn, prof_kw) in CONFIGS.items():
         spec = spec_fn()
@@ -126,6 +178,7 @@ def main() -> None:
         )
         print(f"wrote {out} ({len(results)} pinned configs)")
         regen_fabric(name, spec, prof, prof_kw)
+        regen_profile(name, spec, prof_kw)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,139 @@
+"""Interpret-mode coverage of the Pallas bit-plane popcount kernel.
+
+Mirrors test_zskip_masks.py: the kernel's contract — per-plane '1' counts
+and zero-skip cycle costs for arbitrary uint8 patch matrices sliced into
+word-line blocks — is checked against the ``np.unpackbits`` reference on
+random inputs, the all-zero / all-255 edge cases, non-divisible row counts
+(zero-padded last block), and swept (rows_per_read, cycles_per_read), plus
+a hypothesis property over arbitrary uint8 arrays.  Everything runs with
+``interpret=True`` so CI exercises the Pallas path without a TPU.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.cim.cost import ArrayConfig, bitplane_ones, zskip_cycles
+from repro.kernels.bitplane_profile import bitplane_block_profile, bitplane_profile
+
+
+def _reference(q, block_rows, rows_per_read, cycles_per_read):
+    """np.unpackbits per row slice — the profiler's original math."""
+    s, rows = q.shape
+    n_blocks = -(-rows // block_rows)
+    ones = np.zeros((s, n_blocks, 8), np.int64)
+    cyc = np.zeros((s, n_blocks), np.int64)
+    for b in range(n_blocks):
+        sl = q[:, b * block_rows : min((b + 1) * block_rows, rows)]
+        ones[:, b] = bitplane_ones(sl)
+        reads = np.maximum(1, -(-ones[:, b] // rows_per_read))
+        cyc[:, b] = cycles_per_read * reads.sum(axis=-1)
+    return ones, cyc
+
+
+@pytest.mark.parametrize("s,rows,block_rows", [(8, 256, 128), (16, 300, 128), (4, 100, 256), (32, 128, 64)])
+@pytest.mark.parametrize("rows_per_read", [4, 8, 16])
+def test_kernel_matches_unpackbits_reference(s, rows, block_rows, rows_per_read):
+    rng = np.random.default_rng(s + rows + rows_per_read)
+    q = rng.integers(0, 256, size=(s, rows), dtype=np.uint8)
+    ones, cyc = bitplane_profile(
+        q, block_rows=block_rows, rows_per_read=rows_per_read, cycles_per_read=8,
+        interpret=True,
+    )
+    ref_ones, ref_cyc = _reference(q, block_rows, rows_per_read, 8)
+    np.testing.assert_array_equal(ones, ref_ones)
+    np.testing.assert_array_equal(cyc, ref_cyc)
+
+
+def test_kernel_matches_zskip_cycles_on_full_block():
+    """One exact-width block == zskip_cycles on the raw patch matrix."""
+    rng = np.random.default_rng(0)
+    q = rng.integers(0, 256, size=(16, 128), dtype=np.uint8)
+    cfg = ArrayConfig()  # rows_per_read=8, cycles_per_read=8
+    _, cyc = bitplane_profile(
+        q, block_rows=128, rows_per_read=cfg.rows_per_read,
+        cycles_per_read=cfg.cycles_per_read, interpret=True,
+    )
+    np.testing.assert_array_equal(cyc[:, 0], zskip_cycles(q, cfg))
+
+
+def test_all_zero_patches_cost_the_floor():
+    """Zero input -> zero '1's everywhere -> 1 mandatory read per plane."""
+    q = np.zeros((4, 200), np.uint8)
+    ones, cyc = bitplane_profile(
+        q, block_rows=128, rows_per_read=8, cycles_per_read=8, interpret=True
+    )
+    assert ones.sum() == 0
+    np.testing.assert_array_equal(cyc, np.full((4, 2), 8 * 8))
+
+
+def test_all_ones_patches_cost_the_ceiling():
+    """All-255 input -> every row active in every plane -> baseline reads,
+    and the zero-padded last block counts only its true rows."""
+    q = np.full((3, 192), 255, np.uint8)
+    ones, cyc = bitplane_profile(
+        q, block_rows=128, rows_per_read=8, cycles_per_read=8, interpret=True
+    )
+    np.testing.assert_array_equal(ones[:, 0, :], np.full((3, 8), 128))
+    np.testing.assert_array_equal(ones[:, 1, :], np.full((3, 8), 64))
+    np.testing.assert_array_equal(cyc[:, 0], np.full(3, 8 * 8 * (128 // 8)))
+    np.testing.assert_array_equal(cyc[:, 1], np.full(3, 8 * 8 * (64 // 8)))
+
+
+def test_raw_block_entry_shapes():
+    q = np.zeros((2, 4, 64), np.int32)
+    ones, cyc = bitplane_block_profile(q, interpret=True)
+    assert ones.shape == (2, 8, 4) and cyc.shape == (2, 4)
+
+
+def test_bitplane_profile_validates_input():
+    with pytest.raises(TypeError, match="uint8"):
+        bitplane_profile(np.zeros((2, 8), np.int32), block_rows=8, interpret=True)
+    with pytest.raises(ValueError, match="rows"):
+        bitplane_profile(np.zeros(8, np.uint8), block_rows=8, interpret=True)
+
+
+# ------------------------------------------------------------- hypothesis
+try:
+    from hypothesis import given, settings, strategies as st
+    from hypothesis.extra.numpy import arrays
+
+    @given(
+        q=arrays(
+            np.uint8,
+            st.tuples(st.integers(1, 12), st.integers(1, 80)),
+            elements=st.integers(0, 255),
+        ),
+        block_rows=st.sampled_from([16, 32, 64, 128]),
+        adc_bits=st.integers(1, 4),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_popcount_property_vs_unpackbits(q, block_rows, adc_bits):
+        """For ARBITRARY uint8 matrices the kernel's per-plane counts and
+        cycles equal the np.unpackbits reference on every block slice."""
+        k = 2**adc_bits
+        ones, cyc = bitplane_profile(
+            q, block_rows=block_rows, rows_per_read=k, cycles_per_read=8,
+            interpret=True,
+        )
+        ref_ones, ref_cyc = _reference(q, block_rows, k, 8)
+        np.testing.assert_array_equal(ones, ref_ones)
+        np.testing.assert_array_equal(cyc, ref_cyc)
+
+    @given(
+        q=arrays(
+            np.uint8,
+            st.tuples(st.integers(1, 8), st.integers(1, 40)),
+            elements=st.integers(0, 255),
+        )
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_bitplane_ones_jax_equals_numpy(q):
+        """cost.bitplane_ones: the shift-and-mask jax path == unpackbits."""
+        import jax.numpy as jnp
+
+        np.testing.assert_array_equal(
+            np.asarray(bitplane_ones(jnp.asarray(q), xp=jnp)), bitplane_ones(q)
+        )
+
+except ImportError:  # pragma: no cover - optional dev dep
+    pass

@@ -6,19 +6,12 @@ pytest.importorskip("hypothesis")  # optional dev dep: pip install .[dev]
 from hypothesis import given, settings, strategies as st
 
 from repro.core.alloc.greedy import greedy_allocate, proportional_allocate
-from repro.core.cim import (
-    allocate,
-    profile_network,
-    run_policy,
-    vgg11_cifar10,
-)
+from repro.core.cim import allocate, run_policy
 
 
 @pytest.fixture(scope="module")
-def vgg():
-    spec = vgg11_cifar10()
-    prof = profile_network(spec, n_images=1, sample_patches=128)
-    return spec, prof
+def vgg(profiled):
+    return profiled("vgg11", n_images=1, sample_patches=128)
 
 
 # ---------------------------------------------------------------- greedy core

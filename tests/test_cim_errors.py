@@ -17,10 +17,8 @@ from repro.dse import allocate_batch, get_profiled
 
 
 @pytest.fixture(scope="module")
-def vgg():
-    spec = vgg11_cifar10()
-    prof = profile_network(spec, n_images=1, sample_patches=32)
-    return spec, prof
+def vgg(profiled):
+    return profiled("vgg11", n_images=1, sample_patches=32)
 
 
 # ------------------------------------------------------ allocate(free_budget=)

@@ -5,26 +5,23 @@ import pytest
 pytest.importorskip("hypothesis")  # optional dev dep: pip install .[dev]
 from hypothesis import given, settings, strategies as st
 
-from repro.core.cim import (
-    allocate,
-    profile_network,
-    run_policy,
-    simulate,
-    vgg11_cifar10,
-)
+from repro.core.cim import allocate, run_policy, simulate
 
 
 @pytest.fixture(scope="module")
-def vgg():
-    spec = vgg11_cifar10()
-    return spec, profile_network(spec, n_images=1, sample_patches=96)
+def vgg(profiled):
+    return profiled("vgg11", n_images=1, sample_patches=96)
+
+
+@pytest.fixture(scope="module")
+def vgg64(profiled):
+    return profiled("vgg11", n_images=1, sample_patches=64)
 
 
 @given(st.integers(72, 400))
 @settings(max_examples=12, deadline=None)
-def test_utilization_bounded(vgg_pes):
-    spec = vgg11_cifar10()
-    prof = profile_network(spec, n_images=1, sample_patches=64)
+def test_utilization_bounded(vgg64, vgg_pes):
+    spec, prof = vgg64
     r = run_policy(spec, prof, "blockwise", vgg_pes, n_images=8)
     assert np.all(r.layer_utilization > 0)
     assert np.all(r.layer_utilization <= 1.0 + 1e-9)
@@ -60,9 +57,8 @@ def test_bottleneck_layer_determines_throughput(vgg):
 
 @given(st.sampled_from(["baseline", "weight_based", "perf_layerwise", "blockwise"]))
 @settings(max_examples=8, deadline=None)
-def test_more_arrays_never_hurt(policy):
-    spec = vgg11_cifar10()
-    prof = profile_network(spec, n_images=1, sample_patches=64)
+def test_more_arrays_never_hurt(vgg64, policy):
+    spec, prof = vgg64
     small = run_policy(spec, prof, policy, 100, n_images=8).images_per_sec
     big = run_policy(spec, prof, policy, 200, n_images=8).images_per_sec
     assert big >= small * 0.999

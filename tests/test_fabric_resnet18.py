@@ -8,16 +8,15 @@ sum/max ratio approaches the layer count); the closed loop below holds 40.
 
 import pytest
 
-from repro.core.cim import allocate, profile_network, resnet18_imagenet, simulate
+from repro.core.cim import allocate, simulate
 from repro.fabric import ClosedLoop, FabricSim
 
 POLICIES = ("baseline", "weight_based", "perf_layerwise", "weight_blockflow", "blockwise")
 
 
 @pytest.fixture(scope="module")
-def resnet():
-    spec = resnet18_imagenet()
-    return spec, profile_network(spec, n_images=1, sample_patches=64)
+def resnet(profiled):
+    return profiled("resnet18", n_images=1, sample_patches=64)
 
 
 @pytest.mark.parametrize("policy", POLICIES)

@@ -5,7 +5,7 @@ live in test_fabric_resnet18.py)."""
 import numpy as np
 import pytest
 
-from repro.core.cim import allocate, profile_network, simulate, vgg11_cifar10
+from repro.core.cim import allocate, simulate
 from repro.core.cim.simulate import ARRAYS_PER_PE, CLOCK_HZ, Policy
 from repro.fabric import (
     ClosedLoop,
@@ -21,9 +21,8 @@ POLICIES = ("baseline", "weight_based", "perf_layerwise", "weight_blockflow", "b
 
 
 @pytest.fixture(scope="module")
-def vgg():
-    spec = vgg11_cifar10()
-    return spec, profile_network(spec, n_images=1, sample_patches=128)
+def vgg(profiled):
+    return profiled("vgg11", n_images=1, sample_patches=128)
 
 
 @pytest.mark.parametrize("policy", POLICIES)

@@ -4,14 +4,13 @@ array budget, with per-tenant accounting."""
 import numpy as np
 import pytest
 
-from repro.core.cim import profile_network, resnet18_imagenet, vgg11_cifar10
+from repro.core.cim import resnet18_imagenet
 from repro.fabric import ClosedLoop, Tenant, allocate_shared, fairness_report, run_tenants
 
 
 @pytest.fixture(scope="module")
-def vgg():
-    spec = vgg11_cifar10()
-    return spec, profile_network(spec, n_images=1, sample_patches=128)
+def vgg(profiled):
+    return profiled("vgg11", n_images=1, sample_patches=128)
 
 
 def _pes_for(*specs, mult=2):

@@ -14,7 +14,7 @@ reproduced in EXPERIMENTS.md).
 import numpy as np
 import pytest
 
-from repro.core.cim import allocate, profile_network, simulate, vgg11_cifar10
+from repro.core.cim import allocate, simulate
 from repro.core.cim.simulate import CLOCK_HZ
 from repro.fabric import (
     ClosedLoop,
@@ -29,9 +29,8 @@ from repro.fabric.vtime import dispatch_step
 
 
 @pytest.fixture(scope="module")
-def vgg():
-    spec = vgg11_cifar10()
-    return spec, profile_network(spec, n_images=1, sample_patches=64)
+def vgg(profiled):
+    return profiled("vgg11", n_images=1, sample_patches=64)
 
 
 @pytest.fixture(scope="module")

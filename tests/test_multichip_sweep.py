@@ -5,7 +5,7 @@ tenancy placement."""
 import numpy as np
 import pytest
 
-from repro.core.cim import FabricTopology, profile_network, vgg11_cifar10
+from repro.core.cim import FabricTopology
 from repro.dse import (
     MULTICHIP_OBJECTIVES,
     chip_grid,
@@ -104,9 +104,8 @@ def test_shard_map_batch_pads_odd_batches():
 
 
 # ------------------------------------------------------- tenancy placement
-def test_tenancy_topology_placement():
-    spec = vgg11_cifar10()
-    prof = profile_network(spec, n_images=1, sample_patches=64)
+def test_tenancy_topology_placement(profiled):
+    spec, prof = profiled("vgg11", n_images=1, sample_patches=64)
     tenants = [
         Tenant("prio", spec, prof, weight=2.0),
         Tenant("batch", spec, prof, weight=1.0),

@@ -5,9 +5,13 @@ The refactor from "replica counts in a flat pool" to "placement on a
 resource tree" must be provably behavior-preserving in the degenerate case:
 a 1-chip topology has zero transfer cost everywhere, so every placed policy
 must reproduce the flat allocator replica-for-replica and the fabric
-engines must reproduce the pre-refactor per-request timings bit for bit
-(pinned by tests/golden/*_fabric_scalar.json, generated at the pre-refactor
-commit).  Multi-chip runs must keep the three fabric engines (event
+engines must reproduce the flat (placement-free) per-request timings bit
+for bit, pinned by tests/golden/*_fabric_scalar.json.  The vgg11 fixture
+still dates from the pre-placement commit; the resnet18 fixture was
+re-pinned when the profiling forward moved into XLA (see regen.py), so for
+resnet18 the fixture proves placed == flat at the current profile, not
+continuity with the pre-placement commit.  Multi-chip runs must keep the
+three fabric engines (event
 calendar, numpy virtual-time, jit+vmap virtual-time) bit-identical WITH
 transfer delays enabled.
 """
@@ -23,7 +27,6 @@ from repro.core.cim import (
     allocate,
     allocate_placed,
     place_allocation,
-    profile_network,
     resnet18_imagenet,
     vgg11_cifar10,
 )
@@ -35,16 +38,15 @@ _SPEC_FNS = {"resnet18": resnet18_imagenet, "vgg11": vgg11_cifar10}
 
 
 @pytest.fixture(scope="module")
-def vgg():
-    spec = vgg11_cifar10()
-    return spec, profile_network(spec, n_images=1, sample_patches=64)
+def vgg(profiled):
+    return profiled("vgg11", n_images=1, sample_patches=64)
 
 
 @pytest.fixture(scope="module")
-def vgg_golden():
+def vgg_golden(profiled):
     g = json.loads((GOLDEN / "vgg11_fabric_scalar.json").read_text())
-    spec = vgg11_cifar10()
-    return spec, profile_network(spec, **g["profile_params"]), g
+    spec, prof = profiled("vgg11", **g["profile_params"])
+    return spec, prof, g
 
 
 # ------------------------------------------------------------- cost model
@@ -127,10 +129,9 @@ def test_single_chip_fabric_matches_prerefactor_golden(vgg_golden):
 
 
 @pytest.mark.slow
-def test_single_chip_fabric_matches_prerefactor_golden_resnet18():
+def test_single_chip_fabric_matches_prerefactor_golden_resnet18(profiled):
     g = json.loads((GOLDEN / "resnet18_fabric_scalar.json").read_text())
-    spec = resnet18_imagenet()
-    prof = profile_network(spec, **g["profile_params"])
+    spec, prof = profiled("resnet18", **g["profile_params"])
     topo = FabricTopology.single_chip(g["results"][0]["n_pes"])
     for rec in g["results"]:
         kw = (
