@@ -49,7 +49,11 @@ def _baseline(ref: str, name: str) -> dict | None:
         ).stdout
     except subprocess.CalledProcessError:
         return None  # new bench mode: nothing to drift from
-    return json.loads(out)
+    try:
+        return json.loads(out)
+    except json.JSONDecodeError as e:
+        print(f"error: baseline {ref}:{name} is not valid JSON: {e}", file=sys.stderr)
+        raise SystemExit(2)
 
 
 def _metrics(doc: dict, timing: bool) -> dict[str, tuple[float, bool]]:
@@ -74,11 +78,39 @@ def main(argv=None) -> int:
         action="store_true",
         help="also enforce raw us_per_call timings (noisy on shared runners)",
     )
+    ap.add_argument(
+        "--root",
+        type=pathlib.Path,
+        default=REPO_ROOT,
+        help="directory holding the fresh BENCH_*.json files",
+    )
+    ap.add_argument(
+        "modes",
+        nargs="*",
+        help="bench modes to check (default: every BENCH_*.json under --root)",
+    )
     args = ap.parse_args(argv)
 
+    if args.modes:
+        paths = [args.root / f"BENCH_{m}.json" for m in sorted(args.modes)]
+        for p in paths:
+            if not p.is_file():
+                print(
+                    f"error: {p.name} not found under {args.root} "
+                    f"(run: python -m benchmarks.run --json {p.stem[6:]})",
+                    file=sys.stderr,
+                )
+                return 2
+    else:
+        paths = sorted(args.root.glob("BENCH_*.json"))
+
     failures, checked = [], 0
-    for path in sorted(REPO_ROOT.glob("BENCH_*.json")):
-        cur = json.loads(path.read_text())
+    for path in paths:
+        try:
+            cur = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"error: cannot read {path.name}: {e}", file=sys.stderr)
+            return 2
         base = _baseline(args.base, path.name)
         if base is None:
             print(f"{path.name}: no baseline at {args.base}, skipping")

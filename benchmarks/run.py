@@ -56,17 +56,32 @@ def _bench_config() -> dict:
     return cfg
 
 
+class _Timing(float):
+    """Steady-state us-per-call that also carries the first-call time (which
+    pays jit compile / tracing / cache warmup) — the compile-vs-run split."""
+
+    first_us: float | None = None
+
+
 def _timeit(fn, repeats=3):
-    fn()  # warm
+    t0 = time.perf_counter()
+    fn()  # warm — the first call pays compile/trace/cache fill
+    first = (time.perf_counter() - t0) * 1e6
     t0 = time.perf_counter()
     for _ in range(repeats):
         fn()
-    return (time.perf_counter() - t0) / repeats * 1e6
+    out = _Timing((time.perf_counter() - t0) / repeats * 1e6)
+    out.first_us = first
+    return out
 
 
 def _row(name, us, derived):
     print(f"{name},{us:.1f},{derived}")
-    _JSON_ROWS.append({"name": name, "us_per_call": round(us, 1), "derived": derived})
+    row = {"name": name, "us_per_call": round(us, 1), "derived": derived}
+    first = getattr(us, "first_us", None)
+    if first is not None:  # compile-vs-run breakdown from _timeit
+        row["first_call_us"] = round(first, 1)
+    _JSON_ROWS.append(row)
 
 
 def _detail(*fields):
@@ -731,6 +746,122 @@ def fabric_multichip():
         )
 
 
+# ------------------------------------------------------------- telemetry
+def telemetry():
+    """Recorder overhead on the fabric_tail workload: the event engine and
+    the jit virtual-time kernel run with stats ON vs OFF on the same
+    (allocation, trace) pairs.  OFF is the compiled-out configuration — the
+    instrumented branches never execute, so its cost must be the baseline's
+    (~0% overhead, measured as the ratio of two OFF runs); ON must stay
+    within 5% (acceptance).  Both modes are asserted bit-identical, and the
+    vtime accumulators are asserted to reconcile with the event engine's
+    counters at rtol 1e-9."""
+    from repro.core.cim import allocate, simulate
+    from repro.core.cim.simulate import CLOCK_HZ
+    from repro.fabric import FabricSim, PoissonOpen, VirtualTimeFabric
+
+    spec, prof = _profile("vgg11")
+    pes = spec.min_pes() * 2
+    wb = allocate(spec, prof, "weight_based", pes)
+    bw = allocate(spec, prof, "blockwise", pes)
+    cap = simulate(spec, prof, bw, n_images=64).images_per_sec
+    n_req = 400
+    allocs, procs = [], []
+    for f in (0.5, 0.7):
+        proc = PoissonOpen(n_requests=n_req, rate_per_cycle=f * cap / CLOCK_HZ, seed=5)
+        for a in (wb, bw):
+            allocs.append(a)
+            procs.append(proc)
+
+    def run_event(stats):
+        return [
+            FabricSim(spec, prof, a, seed=3, stats=stats).run(p)
+            for a, p in zip(allocs, procs)
+        ]
+
+    # Overhead ratios use CPU time (process_time) and per-config minima over
+    # 8 interleaved rounds: CPU time rejects wall-clock stalls from co-tenant
+    # load, and taking the min per (config, mode) at sub-pass granularity
+    # gives every sample many chances to land in a quiet window — the summed
+    # minima then estimate the true quiet-machine times for each mode.
+    run_event(False)  # warm numpy/python caches
+    ev = {False: [1e30] * len(allocs), True: [1e30] * len(allocs)}
+    ev2 = {False: [1e30] * len(allocs), True: [1e30] * len(allocs)}
+    off, on = [None] * len(allocs), [None] * len(allocs)
+    import gc
+
+    gc.disable()  # GC pauses would land on whichever mode triggers them
+    try:
+        for _ in range(8):
+            for i, (a, p) in enumerate(zip(allocs, procs)):
+                for st in (False, True):
+                    t0 = time.process_time()
+                    res = FabricSim(spec, prof, a, seed=3, stats=st).run(p)
+                    dt = time.process_time() - t0
+                    if dt < ev[st][i]:
+                        ev2[st][i] = ev[st][i]
+                        ev[st][i] = dt
+                    elif dt < ev2[st][i]:
+                        ev2[st][i] = dt
+                    (on if st else off)[i] = res
+            gc.collect()
+    finally:
+        gc.enable()
+    assert all(
+        np.array_equal(a.completions, b.completions) for a, b in zip(off, on)
+    ), "event engine stats=True changed completion times"
+    t_on, ev_base = sum(ev[True]), sum(ev[False])
+    ev_over = t_on / ev_base
+    # spread between best and second-best UNinstrumented samples = the noise
+    # floor the "on" overhead must be read against ("~0% compiled out")
+    ev_noise = sum(ev2[False]) / ev_base
+
+    vt = VirtualTimeFabric(spec, prof)
+    vt.run_batch(allocs, procs, seed=3)  # compile both kernel variants
+    vt.run_batch(allocs, procs, seed=3, collect_stats=True)
+    vtm = {False: [], True: []}
+    voff = von = None
+    for _ in range(8):
+        for st in (False, True):
+            t0 = time.process_time()
+            for _rep in range(3):  # ~1s samples: single batches are too short
+                res = vt.run_batch(allocs, procs, seed=3, collect_stats=st)
+            vtm[st].append(time.process_time() - t0)
+            von, voff = (res, voff) if st else (von, res)
+    assert np.array_equal(
+        voff.completions, von.completions
+    ), "vtime collect_stats=True changed completion times"
+    tv_on, vt_base = min(vtm[True]) / 3, min(vtm[False]) / 3
+    vt_over = tv_on / vt_base
+    vt_noise = sorted(vtm[False])[1] / min(vtm[False])
+
+    # event counters and in-kernel accumulators describe the same cycles
+    recon = 0.0
+    for i, r in enumerate(on):
+        recon = max(
+            recon,
+            float(
+                np.abs(r.stats.layer_service - von.layer_busy[i]).max()
+                / max(von.layer_busy[i].max(), 1.0)
+            ),
+        )
+    assert recon < 1e-9, f"event/vtime busy-cycle reconciliation off by {recon}"
+
+    _row(
+        f"telemetry_vgg11_{len(allocs)}cfg",
+        t_on * 1e6,
+        f"overhead_event_on={ev_over:.2f}x;"
+        f"overhead_event_off={ev_noise:.2f}x;"
+        f"overhead_vtime_on={vt_over:.2f}x;"
+        f"overhead_vtime_off={vt_noise:.2f}x;"
+        f"recon_rel_err={recon:.1e};bitident=True",
+    )
+    _detail("telemetry", "event_off_s", f"{ev_base:.3f}")
+    _detail("telemetry", "event_on_s", f"{t_on:.3f}")
+    _detail("telemetry", "vtime_off_s", f"{vt_base:.3f}")
+    _detail("telemetry", "vtime_on_s", f"{tv_on:.3f}")
+
+
 ALL = {
     "fig4": fig4,
     "fig6": fig6,
@@ -748,6 +879,7 @@ ALL = {
     "fabric_multichip": fabric_multichip,
     "profile": profile,
     "dse": dse,
+    "telemetry": telemetry,
 }
 
 
@@ -762,21 +894,30 @@ def main() -> None:
         raise SystemExit(f"unknown bench(es) {unknown}; choose from {list(ALL)}")
     print("name,us_per_call,derived")
     config = _bench_config()
+    from repro.fabric.telemetry import telemetry_session
+
     for n in names:
         r0, d0 = len(_JSON_ROWS), len(_JSON_DETAILS)
         t0 = time.perf_counter()
-        ALL[n]()
+        # a scoped recorder per bench: anything instrumented underneath (DSE
+        # cache hit/miss counters, profile timers) lands in this bench's JSON
+        with telemetry_session() as tel:
+            ALL[n]()
+            snap = tel.snapshot()
         wall = time.perf_counter() - t0
         if write_json:
-            write_bench_json(
-                n,
-                {
-                    "config": config,
-                    "wall_clock_s": round(wall, 3),
-                    "rows": _JSON_ROWS[r0:],
-                    "details": _JSON_DETAILS[d0:],
-                },
-            )
+            payload = {
+                "config": config,
+                "wall_clock_s": round(wall, 3),
+                "rows": _JSON_ROWS[r0:],
+                "details": _JSON_DETAILS[d0:],
+            }
+            if snap["counters"] or snap["histograms"]:
+                payload["telemetry"] = {
+                    "counters": snap["counters"],
+                    "histograms": snap["histograms"],
+                }
+            write_bench_json(n, payload)
 
 
 if __name__ == "__main__":

@@ -61,7 +61,30 @@ def parse_args():
         "--link-gbps", type=float, default=32.0,
         help="inter-chip link bandwidth (Gbit/s) for the multi-chip section",
     )
+    ap.add_argument(
+        "--trace-out", type=str, default=None, metavar="PATH",
+        help="write a Perfetto trace (trace_event JSON) of one instrumented "
+        "open-loop run to PATH and print its utilization report "
+        "(open at https://ui.perfetto.dev)",
+    )
     return ap.parse_args()
+
+
+def trace_section(args, spec, prof, pes, cap):
+    """--trace-out: one instrumented open-loop run -> Perfetto + report."""
+    from repro.obs import build_trace, utilization_report, validate_trace, write_trace
+
+    print(f"\n== instrumented run -> {args.trace_out} ==")
+    alloc = allocate(spec, prof, "blockwise", pes)
+    sim = FabricSim(
+        spec, prof, alloc, seed=1, record_timeline=True, stats=True
+    )
+    res = sim.run(PoissonOpen(120, 0.6 * cap / CLOCK_HZ, seed=5))
+    trace = build_trace(sim, res, merge_gap=64.0)
+    write_trace(trace, args.trace_out)
+    print(f"  {validate_trace(trace)} spans written; "
+          f"open the file at https://ui.perfetto.dev")
+    print(utilization_report(res).format())
 
 
 def main():
@@ -194,6 +217,10 @@ def main():
         same = np.array_equal(flat_res.completions[0], res.completions[0])
         print(f"  single chip: transfers all zero; bit-identical to the flat "
               f"fabric engine: {same}")
+
+    # ---- 6. optional: export a Perfetto timeline of an instrumented run
+    if args.trace_out:
+        trace_section(args, spec, prof, pes, cap)
 
 
 if __name__ == "__main__":

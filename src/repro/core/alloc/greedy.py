@@ -66,6 +66,7 @@ def greedy_allocate(
     budget: float,
     *,
     initial_replicas: np.ndarray | None = None,
+    audit=None,
 ) -> AllocationResult:
     """Grant replicas to the unit with the highest expected latency.
 
@@ -77,6 +78,9 @@ def greedy_allocate(
       budget: total cost available for *additional* replicas (the mandatory
         first copy of each unit is assumed already placed and not billed).
       initial_replicas: optionally start from an existing allocation.
+      audit: optional ``repro.obs.AllocationAudit`` receiving one entry per
+        grant (and one for the stopping rule) — the decision log.  ``None``
+        leaves the loop untouched.
 
     Stops when the current slowest unit can no longer be afforded, mirroring
     the paper's stopping rule.
@@ -109,12 +113,17 @@ def greedy_allocate(
             # Paper's stopping rule: if the slowest unit cannot be afforded,
             # the allocation is final (do not skip to cheaper, faster units —
             # they would not reduce the makespan anyway).
+            if audit is not None:
+                audit.stop("budget", i, unit_cost[i], remaining)
             heapq.heappush(heap, (neg_lat, i))
             break
         remaining -= unit_cost[i]
         spent += unit_cost[i]
         replicas[i] += 1
-        heapq.heappush(heap, (-base_latency[i] / replicas[i], i))
+        new_lat = base_latency[i] / replicas[i]
+        if audit is not None:
+            audit.grant(i, unit_cost[i], -neg_lat, new_lat, remaining)
+        heapq.heappush(heap, (-new_lat, i))
 
     latency = base_latency / replicas
     return AllocationResult(replicas, latency, spent, remaining)
@@ -158,6 +167,7 @@ def greedy_allocate_placed(
     unit_penalty: np.ndarray,
     chip_free: np.ndarray,
     initial_replicas: np.ndarray | None = None,
+    audit=None,
 ) -> PlacedAllocationResult:
     """Communication-aware ``greedy_allocate`` over a chip-partitioned fabric.
 
@@ -250,6 +260,9 @@ def greedy_allocate_placed(
         if unit_cost[i] > remaining or not ok.any():
             # the paper's stopping rule, extended: the slowest unit cannot be
             # afforded (budget) or physically placed (capacity) — final.
+            if audit is not None:
+                reason = "budget" if unit_cost[i] > remaining else "capacity"
+                audit.stop(reason, i, unit_cost[i], remaining)
             heapq.heappush(heap, (neg_lat, i))
             break
         # cheapest chip in (new max penalty, raw penalty, id) order
@@ -262,7 +275,10 @@ def greedy_allocate_placed(
         replicas[i] += 1
         chips[i] = np.append(chips[i], k)
         cur_pen[i] = max(cur_pen[i], pen[i, k])
-        heapq.heappush(heap, (-base_latency[i] / replicas[i], i))
+        new_lat = base_latency[i] / replicas[i]
+        if audit is not None:
+            audit.grant(i, unit_cost[i], -neg_lat, new_lat, remaining, chip=k)
+        heapq.heappush(heap, (-new_lat, i))
 
     latency = base_latency / replicas + cur_pen
     return PlacedAllocationResult(

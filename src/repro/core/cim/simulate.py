@@ -170,6 +170,7 @@ def allocate(
     free_budget: float | None = None,
     offered_ips: float | None = None,
     load_frac: float = 0.7,
+    audit=None,
 ) -> Allocation:
     """Pick replica counts.  ``free_budget`` caps the arrays spent on extra
     replicas below the physical ``total - base`` (used to hold back a reserve
@@ -178,7 +179,11 @@ def allocate(
     The ``latency_aware`` policy additionally needs a target offered load:
     ``offered_ips`` (images/sec), or — when omitted — ``load_frac`` times
     the analytic throughput of the ``blockwise`` allocation at the same
-    budget (the natural "provision for X% of peak" operating point)."""
+    budget (the natural "provision for X% of peak" operating point).
+
+    ``audit`` (a ``repro.obs.AllocationAudit``) records the greedy policies'
+    per-grant decision log (``perf_layerwise`` / ``blockwise``); other
+    policies do not route through the greedy loop and leave it empty."""
     total = n_pes * arrays_per_pe
     base_arrays = spec.n_arrays
     if total < base_arrays:
@@ -213,14 +218,14 @@ def allocate(
     if policy == "perf_layerwise":
         # expected per-layer latency with one duplicate: patches x E[max_b c]
         exp_lat = np.array([cyc[i].max(axis=1).mean() * ppi[i] for i in range(L)])
-        res = greedy_allocate(exp_lat, layer_arrays, free)
+        res = greedy_allocate(exp_lat, layer_arrays, free, audit=audit)
         used = int(base_arrays + (res.replicas - 1) @ layer_arrays)
         return Allocation(policy, res.replicas, None, used, total)
 
     if policy == "blockwise":
         # one unit per block across the whole network
         base_lat, cost = blockwise_units(spec, [cyc[i].mean(axis=0) for i in range(L)])
-        res = greedy_allocate(base_lat, cost, free)
+        res = greedy_allocate(base_lat, cost, free, audit=audit)
         block_dups = split_block_dups(spec, res.replicas)
         used = int(base_arrays + ((res.replicas - 1) * cost).sum())
         return Allocation(policy, None, block_dups, used, total)

@@ -533,9 +533,14 @@ def allocate_placed(
     free_budget: float | None = None,
     offered_ips: float | None = None,
     load_frac: float = 0.7,
+    audit=None,
 ) -> PlacedAllocation:
     """``simulate.allocate`` lifted from "replica counts in a flat pool" to
     "placement on the resource tree".
+
+    ``audit`` (a ``repro.obs.AllocationAudit``) records the placed greedy's
+    per-grant decision log — including the chip each replica landed on —
+    for the greedy policies (``perf_layerwise`` / ``blockwise``).
 
     Policy-for-policy mirror of the flat allocator, with moves scored by a
     communication penalty on the dataflow edges:
@@ -597,6 +602,7 @@ def allocate_placed(
         res = greedy_allocate_placed(
             exp_lat, layer_arrays, free,
             home_chip=home, unit_penalty=pen, chip_free=chip_free,
+            audit=audit,
         )
         used = int(base_arrays + (res.replicas - 1) @ layer_arrays)
         alloc = Allocation(policy, res.replicas, None, used, total)
@@ -613,6 +619,7 @@ def allocate_placed(
         res = greedy_allocate_placed(
             base_lat, cost, free,
             home_chip=home_flat, unit_penalty=pen_blocks, chip_free=chip_free,
+            audit=audit,
         )
         used = int(base_arrays + ((res.replicas - 1) * cost).sum())
         alloc = Allocation(

@@ -38,6 +38,7 @@ from ..core.cim.simulate import (
     simulate,
 )
 from ..core.cim.topology import FabricTopology, allocate_placed
+from ..fabric.telemetry import get_telemetry
 from .engine import run_batch, to_allocation
 
 __all__ = [
@@ -170,12 +171,16 @@ def get_captured(
         raise ValueError(f"unknown network {network!r}; choose from {sorted(_SPEC_FNS)}")
     key = (network, profile_images, sample_patches, seed)
     if key not in _CAPTURE_CACHE:
-        _CAPTURE_CACHE[key] = capture_activations(
-            _SPEC_FNS[network](),
-            n_images=profile_images,
-            sample_patches=sample_patches,
-            seed=seed,
-        )
+        get_telemetry().count("dse.capture.miss")
+        with get_telemetry().timed("dse.capture", network=network):
+            _CAPTURE_CACHE[key] = capture_activations(
+                _SPEC_FNS[network](),
+                n_images=profile_images,
+                sample_patches=sample_patches,
+                seed=seed,
+            )
+    else:
+        get_telemetry().count("dse.capture.hit")
     return _CAPTURE_CACHE[key]
 
 
@@ -193,6 +198,7 @@ def get_profiled(
     _spec_for(network, array)  # validate the name before the cache lookup
     key = (network, array, profile_images, sample_patches, seed)
     if key not in _PROFILE_CACHE:
+        get_telemetry().count("dse.profile.miss")
         cap = get_captured(
             network,
             profile_images=profile_images,
@@ -200,7 +206,10 @@ def get_profiled(
             seed=seed,
         )
         spec = _spec_for(network, array)
-        _PROFILE_CACHE[key] = (spec, derive_profile(cap, spec, array=array))
+        with get_telemetry().timed("dse.profile", network=network):
+            _PROFILE_CACHE[key] = (spec, derive_profile(cap, spec, array=array))
+    else:
+        get_telemetry().count("dse.profile.hit")
     return _PROFILE_CACHE[key]
 
 
@@ -285,17 +294,26 @@ def run_sweep(
         get_profiled(net, arr, **prof_kw)
 
     elapsed = 0.0
+    tel = get_telemetry()
+    tel.gauge("dse.sweep.points", C)
+    tel.gauge("dse.sweep.groups", len(groups))
+    done = 0
     for (net, arr), rows in groups.items():
         spec, prof = get_profiled(net, arr, **prof_kw)
         idx = np.asarray(rows)
         pols = np.array([points[i].policy for i in rows], dtype=object)
         pes = np.array([points[i].n_pes for i in rows], dtype=np.int64)
         t0 = time.perf_counter()
+        group_timer = tel.timed("dse.sweep.group", network=net, points=len(rows))
+        group_timer.__enter__()
         allocs = None
         if engine == "batch":
             key = (net, arr, profile_images, sample_patches, seed, shard_devices)
             if key not in _SIMULATOR_CACHE:
+                tel.count("dse.simulator.miss")
                 _SIMULATOR_CACHE[key] = BatchSimulator(spec, prof, shard=shard_devices)
+            else:
+                tel.count("dse.simulator.hit")
             alloc, res = run_batch(
                 spec,
                 prof,
@@ -334,6 +352,9 @@ def run_sweep(
                 cache_key=(net, arr, profile_images, sample_patches, seed),
             )
         elapsed += time.perf_counter() - t0
+        group_timer.__exit__(None, None, None)
+        done += len(rows)
+        tel.gauge("dse.sweep.points_done", done)
 
     return SweepResult(
         points=list(points),
@@ -606,8 +627,10 @@ def _fabric_eval(
         # cached like _SIMULATOR_CACHE so repeated sweeps over the same
         # (network, array, profile) group reuse the compiled kernels
         if cache_key is not None and cache_key in _VT_CACHE:
+            get_telemetry().count("dse.vt.hit")
             vt = _VT_CACHE[cache_key]
         else:
+            get_telemetry().count("dse.vt.miss")
             vt = VirtualTimeFabric(spec, prof)
             if cache_key is not None:
                 _VT_CACHE[cache_key] = vt

@@ -19,13 +19,21 @@ provisioning (``provision_latency_aware``) and the DSE latency columns.
 from .arrivals import ClosedLoop, PoissonOpen, TraceReplay, arrival_times
 from .dispatch import FabricSim
 from .drift import DriftConfig, OnlineReallocator, shift_profile
-from .events import EventCalendar, ServerPool
+from .events import EventCalendar, PoolStats, ServerPool
 from .metrics import (
     FabricResult,
+    FabricStats,
     LatencyStats,
     ReallocationEvent,
     latency_stats,
     steady_throughput,
+)
+from .telemetry import (
+    NULL_TELEMETRY,
+    Telemetry,
+    get_telemetry,
+    set_telemetry,
+    telemetry_session,
 )
 from .tenancy import (
     SharedAllocation,
@@ -52,9 +60,16 @@ __all__ = [
     "OnlineReallocator",
     "shift_profile",
     "EventCalendar",
+    "PoolStats",
     "ServerPool",
     "FabricResult",
+    "FabricStats",
     "LatencyStats",
+    "Telemetry",
+    "NULL_TELEMETRY",
+    "get_telemetry",
+    "set_telemetry",
+    "telemetry_session",
     "ReallocationEvent",
     "latency_stats",
     "steady_throughput",

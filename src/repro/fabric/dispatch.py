@@ -44,7 +44,7 @@ from ..core.cim.profile import NetworkProfile
 from ..core.cim.simulate import Allocation, CLOCK_HZ, _layer_patch_cycles
 from .arrivals import ArrivalProcess, ClosedLoop, arrival_times
 from .events import EventCalendar, ServerPool
-from .metrics import FabricResult
+from .metrics import FabricResult, FabricStats
 from .vtime import sample_service_indices
 
 __all__ = ["FabricSim"]
@@ -77,11 +77,13 @@ class FabricSim:
         clock_hz: float = CLOCK_HZ,
         record_timeline: bool = False,
         placement=None,
+        stats: bool = False,
     ):
         self.spec = spec
         self.alloc = alloc
         self.clock_hz = clock_hz
         self.reallocator = reallocator
+        self.collect_stats = bool(stats)
         # per-stage request entry transfer (core.cim.topology.Placement);
         # None = flat single-chip fabric, zero added work on the hot path
         self._xfer = (
@@ -105,6 +107,7 @@ class FabricSim:
                         int(alloc.layer_dups[i]),
                         width=layer.n_arrays,
                         record_starts=record_timeline,
+                        stats=stats,
                     )
                 ]
                 services = cyc[i].max(axis=1)  # per-patch barrier
@@ -119,6 +122,7 @@ class FabricSim:
                         int(dups[b]),
                         width=layer.arrays_per_block,
                         record_starts=record_timeline,
+                        stats=stats,
                     )
                     for b in range(layer.n_blocks)
                 ]
@@ -185,6 +189,9 @@ class FabricSim:
         )
         arrivals = np.zeros(n)
         completions = np.zeros(n)
+        if self.collect_stats:
+            stage_entry = np.zeros((n, L))
+            stage_exit = np.zeros((n, L))
         next_admit = 0
         if times is None:
             assert isinstance(proc, ClosedLoop)
@@ -206,6 +213,11 @@ class FabricSim:
                     next_admit += 1
                 continue
             done = self._dispatch_stage(s, t, r)
+            if self.collect_stats:
+                # entry = when the request became ready for the stage, BEFORE
+                # the inter-chip transfer — residence = xfer + wait + service
+                stage_entry[r, s] = t
+                stage_exit[r, s] = done
             cal.push(done, r, s + 1)
 
         layer_busy = np.array(
@@ -222,6 +234,39 @@ class FabricSim:
         layer_capacity = np.array(
             [sum(p.capacity_cycles(horizon) for p in st.pools) for st in self.stages]
         )
+        stats = None
+        if self.collect_stats:
+            xfer = (
+                np.zeros(L) if self._xfer is None else self._xfer * float(n)
+            )  # every request crosses each stage's entry links exactly once
+            stats = FabricStats(
+                layer_service=np.array(
+                    [sum(p.stats.svc_cycles for p in st.pools) for st in self.stages]
+                ),
+                layer_queue_wait=np.array(
+                    [sum(p.stats.queue_wait for p in st.pools) for st in self.stages]
+                ),
+                layer_xfer=xfer,
+                layer_reprogram=np.array(
+                    [
+                        sum(p.stats.frozen_cycles * p.width for p in st.pools)
+                        for st in self.stages
+                    ]
+                ),
+                layer_jobs=np.array(
+                    [sum(p.stats.jobs for p in st.pools) for st in self.stages],
+                    dtype=np.int64,
+                ),
+                replica_busy=tuple(
+                    tuple(np.asarray(p.stats.server_busy) for p in st.pools)
+                    for st in self.stages
+                ),
+                stage_entry=stage_entry,
+                stage_exit=stage_exit,
+                layer_occupied=np.array(
+                    [sum(p.busy for p in st.pools) for st in self.stages]
+                ),
+            )
         return FabricResult(
             policy=self.alloc.policy,
             clock_hz=self.clock_hz,
@@ -233,4 +278,5 @@ class FabricSim:
             reallocations=(
                 list(self.reallocator.events) if self.reallocator is not None else []
             ),
+            stats=stats,
         )

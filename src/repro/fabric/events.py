@@ -32,7 +32,27 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-__all__ = ["ServerPool", "EventCalendar"]
+__all__ = ["PoolStats", "ServerPool", "EventCalendar"]
+
+
+@dataclass
+class PoolStats:
+    """Per-pool accumulators for the telemetry layer (``stats=True``).
+
+    Units are JOB-cycles (one job on one replica for one cycle), except
+    ``frozen_cycles`` which is replica-cycles lost to reprogramming freezes;
+    multiply by the pool's ``width`` for array-cycles.  ``server_busy`` is
+    per replica lane, the input to replica-level load-imbalance reporting.
+    It is a plain float list — scalar ``+=`` on a list element is an order
+    of magnitude cheaper than on an ndarray cell, and the dispatch hot loop
+    touches it per job batch; convert with ``np.asarray`` when reporting.
+    """
+
+    server_busy: list[float]  # (D,) busy cycles per replica lane
+    svc_cycles: float = 0.0  # total service cycles dispatched
+    queue_wait: float = 0.0  # cycles jobs spent waiting for a free replica
+    frozen_cycles: float = 0.0  # replica-cycles lost to freeze_until stalls
+    jobs: int = 0
 
 
 def _earliest_free(avail: list[float]) -> int:
@@ -61,10 +81,18 @@ class ServerPool:
         "record_starts",
         "starts",
         "durations",
+        "servers",
+        "stats",
         "_online",
     )
 
-    def __init__(self, n_servers: int, width: int = 1, record_starts: bool = False):
+    def __init__(
+        self,
+        n_servers: int,
+        width: int = 1,
+        record_starts: bool = False,
+        stats: bool = False,
+    ):
         if n_servers < 1:
             raise ValueError("a pool needs at least one server")
         self.avail: list[float] = [0.0] * n_servers
@@ -74,6 +102,8 @@ class ServerPool:
         self.record_starts = record_starts
         self.starts: list[np.ndarray] = []
         self.durations: list[np.ndarray] = []
+        self.servers: list[np.ndarray] = []  # lane index per job (record_starts)
+        self.stats = PoolStats([0.0] * n_servers) if stats else None
         self._online: list[tuple[float, int]] = [(0.0, n_servers)]
 
     @property
@@ -91,35 +121,93 @@ class ServerPool:
         m = s.size
         if m == 0:
             return t_ready
-        self.busy += float(s.sum()) * self.width
+        tot = float(s.sum())
+        self.busy += tot * self.width
         self.jobs += m
+        observe = self.record_starts or self.stats is not None
         if len(self.avail) == 1:
             start0 = self.avail[0] if self.avail[0] > t_ready else t_ready
             # cumsum over [start0, s...] accumulates left-to-right, the same
             # op order as the per-job recurrence — bit-identical to vtime's
             # step scan (a plain `start0 + cumsum(s)` would round differently)
             ends = np.cumsum(np.concatenate(((start0,), s)))[1:]
-            if self.record_starts:
-                self.starts.append(np.concatenate(((start0,), ends[:-1])))
-                self.durations.append(s)
+            if observe:
+                if self.record_starts:
+                    self.starts.append(np.concatenate(((start0,), ends[:-1])))
+                    self.durations.append(s)
+                    self.servers.append(np.zeros(m, dtype=np.int64))
+                if self.stats is not None:
+                    ps = self.stats
+                    ps.jobs += m
+                    ps.svc_cycles += tot
+                    # sum(starts) - m*t_ready without materializing starts
+                    if m == 1:
+                        ps.queue_wait += start0 - t_ready
+                    else:
+                        ps.queue_wait += (
+                            start0 + float(ends[:-1].sum()) - m * t_ready
+                        )
+                    ps.server_busy[0] += tot
             self.avail[0] = float(ends[-1])
             return self.avail[0]
         avail = self.avail
         last = 0.0
         if self.record_starts:
-            st = np.empty(m)
-            for j, sv in enumerate(s.tolist()):
+            st_l: list[float] = []
+            lane_l: list[int] = []
+            put_st = st_l.append
+            put_lane = lane_l.append
+            for sv in s.tolist():
                 i = _earliest_free(avail)
                 a = avail[i]
                 if a < t_ready:
                     a = t_ready
-                st[j] = a
+                put_st(a)
+                put_lane(i)
                 e = a + sv
                 if e > last:
                     last = e
                 avail[i] = e
-            self.starts.append(st)
+            lane = np.array(lane_l, dtype=np.int64)
+            self.starts.append(np.array(st_l))
             self.durations.append(s)
+            self.servers.append(lane)
+            if self.stats is not None:
+                ps = self.stats
+                ps.jobs += m
+                ps.svc_cycles += tot
+                ps.queue_wait += float(sum(st_l)) - m * t_ready
+                sb = ps.server_busy
+                for i, v in enumerate(
+                    np.bincount(lane, weights=s, minlength=len(sb)).tolist()
+                ):
+                    sb[i] += v
+        elif observe:
+            # stats-only: one float add per job; per-lane busy falls out of
+            # the free-time deltas afterwards.  All jobs in this batch share
+            # t_ready, so a lane's idle gap (the clamp) can occur at most
+            # once — on its first job — hence busy = final - max(init, t).
+            avail0 = list(avail)
+            qw = 0.0
+            for sv in s.tolist():
+                i = _earliest_free(avail)
+                a = avail[i]
+                if a < t_ready:
+                    a = t_ready
+                qw += a
+                e = a + sv
+                if e > last:
+                    last = e
+                avail[i] = e
+            ps = self.stats
+            ps.jobs += m
+            ps.svc_cycles += tot
+            ps.queue_wait += qw - m * t_ready
+            sb = ps.server_busy
+            for i, a0 in enumerate(avail0):
+                b = avail[i] - (a0 if a0 > t_ready else t_ready)
+                if b > 0.0:
+                    sb[i] += b
         else:
             for sv in s.tolist():
                 i = _earliest_free(avail)
@@ -136,6 +224,8 @@ class ServerPool:
         """Add ``extra`` replicas that come online at ``t_free``."""
         self.avail.extend([float(t_free)] * int(extra))
         self._online.append((float(t_free), int(extra)))
+        if self.stats is not None:
+            self.stats.server_busy.extend([0.0] * int(extra))
 
     def capacity_cycles(self, horizon: float) -> float:
         """Array-cycles of capacity over [0, horizon], counting replicas
@@ -146,7 +236,40 @@ class ServerPool:
 
     def freeze_until(self, t: float) -> None:
         """Stall the pool (e.g. while arrays are being reprogrammed)."""
+        if self.stats is not None:
+            # replica-cycles the freeze takes away: each lane that would have
+            # been free before ``t`` cannot serve until ``t``
+            self.stats.frozen_cycles += sum(
+                t - a for a in self.avail if a < t
+            )
         self.avail = [a if a > t else float(t) for a in self.avail]
+
+    def occupancy(self, bucket: float, horizon: float) -> np.ndarray:
+        """Mean busy replicas per time bucket (requires record_starts).
+
+        Exact: every job interval is split over the buckets it overlaps, so
+        ``occupancy(...) * bucket`` integrates to total busy cycles."""
+        n = int(np.ceil(horizon / bucket)) + 1
+        out = np.zeros(n)
+        if not self.starts:
+            return out
+        B = float(bucket)
+        a = np.concatenate(self.starts)
+        d = np.concatenate(self.durations)
+        b = a + d
+        i0 = np.minimum((a / B).astype(np.int64), n - 1)
+        i1 = np.minimum((b / B).astype(np.int64), n - 1)
+        same = i0 == i1
+        np.add.at(out, i0[same], d[same])
+        sp = ~same
+        np.add.at(out, i0[sp], (i0[sp] + 1) * B - a[sp])
+        np.add.at(out, i1[sp], b[sp] - i1[sp] * B)
+        # full buckets strictly between i0 and i1, via a difference array
+        diff = np.zeros(n + 1)
+        np.add.at(diff, i0[sp] + 1, B)
+        np.add.at(diff, i1[sp], -B)
+        out += np.cumsum(diff)[:n]
+        return out / B
 
     def timeline(self, bucket: float, horizon: float) -> np.ndarray:
         """Busy array-cycles per time bucket (requires record_starts)."""

@@ -7,6 +7,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 __all__ = [
+    "FabricStats",
     "LatencyStats",
     "ReallocationEvent",
     "FabricResult",
@@ -79,6 +80,47 @@ class ReallocationEvent:
 
 
 @dataclass
+class FabricStats:
+    """Per-layer telemetry from an instrumented event-engine run
+    (``FabricSim(stats=True)``) — the barrier/stall attribution the
+    end-of-run percentiles cannot show.
+
+    Job-cycle accumulators (``layer_service`` / ``layer_queue_wait``) sum
+    over every job the layer's pools dispatched; they reconcile with the
+    virtual-time kernel's scan-carry accumulators (``VTResult.layer_busy`` /
+    ``layer_wait``) to float64 summation-order tolerance (rtol 1e-9, pinned
+    in tests).  ``layer_reprogram`` is in replica-cycles x width =
+    array-cycles, directly comparable to ``FabricResult.layer_capacity``.
+    ``stage_entry`` / ``stage_exit`` are per-(request, stage) residence
+    bounds — the raw material of the Perfetto request tracks.
+    """
+
+    layer_service: np.ndarray  # (L,) job-cycles of service dispatched
+    layer_queue_wait: np.ndarray  # (L,) job-cycles waiting for a free replica
+    layer_xfer: np.ndarray  # (L,) cycles of stage-entry transfer, all requests
+    layer_reprogram: np.ndarray  # (L,) array-cycles frozen for reprogramming
+    layer_jobs: np.ndarray  # (L,) int64 jobs dispatched
+    replica_busy: tuple  # per layer: tuple of per-pool (D,) busy job-cycles
+    stage_entry: np.ndarray  # (N, L) request arrival at each stage
+    stage_exit: np.ndarray  # (N, L) request completion of each stage
+    # (L,) array-cycles the pools' replicas were OCCUPIED (barrier-inclusive:
+    # a layer-wise duplicate charges the per-patch barrier max to all its
+    # arrays).  occupied - FabricResult.layer_busy = intra-layer barrier waste
+    layer_occupied: np.ndarray | None = None
+
+    def replica_imbalance(self) -> np.ndarray:
+        """(L,) max/mean busy cycles over the layer's replica lanes — 1.0 is
+        perfectly balanced load across replicas."""
+        out = np.ones(len(self.replica_busy))
+        for i, pools in enumerate(self.replica_busy):
+            lanes = np.concatenate(pools)
+            m = lanes.mean()
+            if m > 0:
+                out[i] = float(lanes.max() / m)
+        return out
+
+
+@dataclass
 class FabricResult:
     """One fabric run: per-request timings + per-pool utilization."""
 
@@ -93,6 +135,7 @@ class FabricResult:
     layer_capacity: np.ndarray | None = None
     reallocations: list[ReallocationEvent] = field(default_factory=list)
     tenant: str | None = None
+    stats: FabricStats | None = None  # populated by FabricSim(stats=True)
 
     @property
     def latencies(self) -> np.ndarray:

@@ -80,7 +80,7 @@ def dispatch_step(xp, free, svc):
     return free, end
 
 
-def pool_dispatch(xp, scan, free, t_ready, svc, b_mask):
+def pool_dispatch(xp, scan, free, t_ready, svc, b_mask, collect=False):
     """FIFO-dispatch a batch of jobs, all ready at ``t_ready``.
 
     ``free``: (B, D) per-pool server free-times; ``svc``: (P, B) one job per
@@ -93,18 +93,41 @@ def pool_dispatch(xp, scan, free, t_ready, svc, b_mask):
     nondecreasing, so a stored pre-clamp value below ``t_ready`` can never
     matter again, and the sorted multiset of free-times (which is all the
     FIFO recurrence sees) evolves identically.
+
+    ``collect=True`` additionally returns (busy, wait) for this batch: busy
+    = total service cycles dispatched, wait = total queue-wait (job start -
+    ``t_ready``).  A job's start is read off lane 0 AFTER the clamp and
+    BEFORE the sorted-insert — the same quantity the event engine's
+    ``max(avail_i, t_ready)`` yields — so the telemetry path performs the
+    identical IEEE ops on ``free``/``done`` and cannot perturb results.
     """
     free = xp.maximum(free, t_ready)
+    if not collect:
 
-    def job(free, svc_p):
-        return dispatch_step(xp, free, svc_p)
+        def job(free, svc_p):
+            return dispatch_step(xp, free, svc_p)
 
-    free, ends = scan(job, free, svc)  # ends: (P, B) per-job completion times
+        free, ends = scan(job, free, svc)  # (P, B) per-job completion times
+        done = xp.maximum(xp.where(b_mask, ends, -xp.inf).max(), t_ready)
+        return free, done
+
+    def job(state, svc_p):
+        free, acc = state
+        start = free[..., 0]  # earliest-free lane = this job's start time
+        free, end = dispatch_step(xp, free, svc_p)
+        # accumulate queue wait in the carry (a 0-d scalar) rather than
+        # emitting a second (B,) scan output: the collect kernel then adds
+        # one fused reduction per job instead of doubling the ys traffic
+        acc = acc + xp.where(b_mask, start - t_ready, 0.0).sum()
+        return (free, acc), end
+
+    (free, wait), ends = scan(job, (free, xp.zeros(())), svc)
     done = xp.maximum(xp.where(b_mask, ends, -xp.inf).max(), t_ready)
-    return free, done
+    busy = xp.where(b_mask, svc, 0.0).sum()
+    return free, done, busy, wait
 
 
-def _request_step(xp, job_scan, stages, xfer, concurrency, carry, inp):
+def _request_step(xp, job_scan, stages, xfer, concurrency, collect, carry, inp):
     """Run one request through every stage against the carried pool state.
 
     ``stages``: sequence of (cycles (S, B), b_mask (B,)) per layer;
@@ -117,8 +140,15 @@ def _request_step(xp, job_scan, stages, xfer, concurrency, carry, inp):
     indices).  Closed loop (``concurrency`` not None) reads the arrival from
     the ring: request r enters when request r - concurrency completed (slots
     before the first wrap hold the 0.0 init = the initial admissions).
+
+    ``collect=True`` carries two extra per-layer tuples of 0-d accumulators
+    (busy, wait) through the scan — the jit path's utilization/duty-cycle
+    telemetry, emitted by the same single jit call as the percentiles.
     """
-    frees, ring = carry
+    if collect:
+        frees, ring, busy, wait = carry
+    else:
+        frees, ring = carry
     r, t_arr, idx = inp
     if concurrency is None:
         t = t_arr
@@ -131,27 +161,53 @@ def _request_step(xp, job_scan, stages, xfer, concurrency, carry, inp):
         if xfer is not None:
             t = t + xfer[li]
         svc = cycles[ix]  # (P, B) this request's sampled per-block cycles
-        free, t = pool_dispatch(xp, job_scan, free, t, svc, b_mask)
+        if collect:
+            free, t, b_l, w_l = pool_dispatch(
+                xp, job_scan, free, t, svc, b_mask, collect=True
+            )
+            busy = busy[:li] + (busy[li] + b_l,) + busy[li + 1 :]
+            wait = wait[:li] + (wait[li] + w_l,) + wait[li + 1 :]
+        else:
+            free, t = pool_dispatch(xp, job_scan, free, t, svc, b_mask)
         new_frees.append(free)
     if concurrency is not None:
         ring = xp.where(xp.arange(ring.shape[0]) == pos, t, ring)
+    if collect:
+        return (tuple(new_frees), ring, busy, wait), (t0, t)
     return (tuple(new_frees), ring), (t0, t)
 
 
 def run_fabric_kernel(
     xp, scan, stages, frees, arrivals, idx, concurrency, percentiles,
-    job_scan=None, xfer=None,
+    job_scan=None, xfer=None, collect_stats=False,
 ):
     """Whole-run recurrence: scan ``_request_step`` over requests, then
     reduce per-request latencies to percentiles — one fused computation in
     the jax path, a plain loop in the numpy path.  ``job_scan`` (defaults to
     ``scan``) drives the inner per-job loop; ``xfer`` is this config's (L,)
-    stage transfer vector (or None for the flat fabric)."""
+    stage transfer vector (or None for the flat fabric).
+
+    ``collect_stats=True`` returns two extra (L,) vectors — total busy
+    (service) cycles and queue-wait cycles per layer, accumulated through
+    the scan carry.  They reconcile with the event engine's ``PoolStats``
+    counters to float64 summation-order tolerance (scalar ``+=`` there vs.
+    ``xp.sum`` here); completions/percentiles are bit-identical either way.
+    """
     n = arrivals.shape[0]
     ring = xp.zeros(concurrency if concurrency is not None else 1)
     from functools import partial
 
-    body = partial(_request_step, xp, job_scan or scan, stages, xfer, concurrency)
+    body = partial(
+        _request_step, xp, job_scan or scan, stages, xfer, concurrency, collect_stats
+    )
+    if collect_stats:
+        zeros = tuple(xp.zeros(()) for _ in stages)
+        carry, (t_arr, comp) = scan(
+            body, (frees, ring, zeros, zeros), (xp.arange(n), arrivals, idx)
+        )
+        lat = comp - t_arr
+        pct = percentile_kernel(xp, lat, percentiles)
+        return t_arr, comp, pct, xp.stack(carry[2]), xp.stack(carry[3])
     (_, _), (t_arr, comp) = scan(body, (frees, ring), (xp.arange(n), arrivals, idx))
     lat = comp - t_arr
     pct = percentile_kernel(xp, lat, percentiles)
@@ -292,6 +348,11 @@ class VTResult:
     percentiles: np.ndarray  # (C, P) latency percentiles, cycles
     percentile_qs: tuple  # the P percentile levels
     clock_hz: float = CLOCK_HZ
+    # telemetry (run_batch(collect_stats=True) only): per-layer service and
+    # queue-wait job-cycles accumulated inside the kernel's scan carry —
+    # reconcile with FabricSim(stats=True)'s PoolStats at rtol 1e-9
+    layer_busy: np.ndarray | None = None  # (C, L)
+    layer_wait: np.ndarray | None = None  # (C, L)
 
     def __len__(self) -> int:
         return self.completions.shape[0]
@@ -382,7 +443,7 @@ class VirtualTimeFabric:
                 )
         return out
 
-    def _jax_runner(self, g: _GroupPack, concurrency, n, percentiles):
+    def _jax_runner(self, g: _GroupPack, concurrency, n, percentiles, collect=False):
         """Cached jit(vmap) of the shared kernel for one group structure."""
         has_xfer = g.xfer is not None
         key = (
@@ -393,6 +454,7 @@ class VirtualTimeFabric:
             percentiles,
             tuple(f.shape[1:] for f in g.frees),
             has_xfer,
+            collect,  # stats-on kernels compile separately (extra outputs)
         )
         if key not in self._compiled:
             import functools
@@ -414,6 +476,7 @@ class VirtualTimeFabric:
                 return run_fabric_kernel(
                     jnp, jax.lax.scan, stages, frees, arrivals, idx,
                     concurrency, percentiles, job_scan=job_scan, xfer=xfer,
+                    collect_stats=collect,
                 )
 
             self._compiled[key] = jax.jit(
@@ -431,6 +494,7 @@ class VirtualTimeFabric:
         engine: str = "jax",
         percentiles: tuple = (50.0, 95.0, 99.0),
         placements: list | None = None,
+        collect_stats: bool = False,
     ) -> VTResult:
         """Evaluate C allocations against one shared arrival process (or a
         per-allocation list of same-kind processes).  Service times are
@@ -440,7 +504,11 @@ class VirtualTimeFabric:
         ``placements`` (one ``core.cim.topology.Placement`` per allocation,
         or None for the flat fabric) adds each config's per-stage entry
         transfer delays to the kernel — the multi-chip path, bit-identical
-        to ``FabricSim(placement=...)``."""
+        to ``FabricSim(placement=...)``.
+
+        ``collect_stats=True`` additionally populates ``VTResult.layer_busy``
+        / ``layer_wait`` (C, L) from in-kernel accumulators; completion times
+        and percentiles are bit-identical with the flag on or off."""
         if engine not in ("jax", "numpy"):
             raise ValueError(f"engine must be 'jax' or 'numpy', got {engine!r}")
         allocs = list(allocs)
@@ -479,35 +547,53 @@ class VirtualTimeFabric:
         idx = sample_service_indices(np.random.default_rng(seed), dims, n)
 
         C = len(allocs)
+        L = len(self.spec.layers)
         arrivals = np.zeros((C, n))
         completions = np.zeros((C, n))
         pcts = np.zeros((C, len(percentiles)))
+        busy = np.zeros((C, L)) if collect_stats else None
+        wait = np.zeros((C, L)) if collect_stats else None
         if n == 0:
-            return VTResult(arrivals, completions, pcts, tuple(percentiles), self.clock_hz)
+            return VTResult(
+                arrivals, completions, pcts, tuple(percentiles), self.clock_hz,
+                layer_busy=busy, layer_wait=wait,
+            )
         for g in self._groups(allocs, placements):
             if engine == "jax":
                 from jax.experimental import enable_x64
 
-                fn = self._jax_runner(g, concurrency, n, tuple(percentiles))
+                fn = self._jax_runner(
+                    g, concurrency, n, tuple(percentiles), collect=collect_stats
+                )
                 with enable_x64():
-                    t_arr, comp, pct = fn(g.frees, g.xfer, times[g.rows], tuple(idx))
-                t_arr, comp, pct = np.asarray(t_arr), np.asarray(comp), np.asarray(pct)
+                    out = fn(g.frees, g.xfer, times[g.rows], tuple(idx))
+                t_arr, comp, pct = (np.asarray(o) for o in out[:3])
+                if collect_stats:
+                    busy[g.rows] = np.asarray(out[3])
+                    wait[g.rows] = np.asarray(out[4])
             else:
                 t_arr = np.zeros((len(g.rows), n))
                 comp = np.zeros((len(g.rows), n))
                 pct = np.zeros((len(g.rows), len(percentiles)))
                 for k, row in enumerate(g.rows):
                     frees = tuple(f[k].copy() for f in g.frees)
-                    a, c, p = run_fabric_kernel(
+                    out = run_fabric_kernel(
                         np, _np_scan, g.stages, frees, times[row],
                         tuple(idx), concurrency, tuple(percentiles),
                         xfer=None if g.xfer is None else g.xfer[k],
+                        collect_stats=collect_stats,
                     )
-                    t_arr[k], comp[k], pct[k] = a, c, p
+                    t_arr[k], comp[k], pct[k] = out[:3]
+                    if collect_stats:
+                        busy[row] = np.asarray(out[3])
+                        wait[row] = np.asarray(out[4])
             arrivals[g.rows] = t_arr
             completions[g.rows] = comp
             pcts[g.rows] = pct
-        return VTResult(arrivals, completions, pcts, tuple(percentiles), self.clock_hz)
+        return VTResult(
+            arrivals, completions, pcts, tuple(percentiles), self.clock_hz,
+            layer_busy=busy, layer_wait=wait,
+        )
 
 
 # ------------------------------------------------- fabric-oracle refinement

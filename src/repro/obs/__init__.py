@@ -1,0 +1,23 @@
+"""Observability exporters for the fabric telemetry layer.
+
+``repro.fabric.telemetry`` records; this package *renders*: Chrome/Perfetto
+``trace_event`` timelines from an instrumented event-engine run
+(``trace``), the paper's Fig-9-style utilization analysis as a standard
+table (``report``), and the allocator's decision log (``audit``).  Nothing
+here touches the simulation hot paths — exporters consume the ``stats`` /
+``record_starts`` artifacts after the run finished.
+"""
+
+from .audit import AllocationAudit, AuditEntry
+from .report import UtilizationReport, utilization_report
+from .trace import build_trace, validate_trace, write_trace
+
+__all__ = [
+    "AllocationAudit",
+    "AuditEntry",
+    "UtilizationReport",
+    "utilization_report",
+    "build_trace",
+    "validate_trace",
+    "write_trace",
+]

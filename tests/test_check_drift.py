@@ -1,0 +1,62 @@
+"""`benchmarks/check_drift.py` CLI error handling: a missing or malformed
+BENCH_*.json must produce a single-line error on stderr and exit code 2 —
+never a traceback (the nightly log should say what to do, not where Python
+died)."""
+
+import json
+import pathlib
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _run(*args, cwd=REPO):
+    return subprocess.run(
+        [sys.executable, str(REPO / "benchmarks" / "check_drift.py"), *args],
+        cwd=cwd,
+        capture_output=True,
+        text=True,
+        timeout=120,
+    )
+
+
+def test_missing_bench_file_is_one_line_error(tmp_path):
+    r = _run("--root", str(tmp_path), "no_such_mode")
+    assert r.returncode == 2
+    lines = [ln for ln in r.stderr.splitlines() if ln.strip()]
+    assert len(lines) == 1
+    assert lines[0].startswith("error:")
+    assert "BENCH_no_such_mode.json" in lines[0]
+    assert "benchmarks.run --json no_such_mode" in lines[0]  # says what to do
+    assert "Traceback" not in r.stderr
+
+
+def test_malformed_bench_file_is_one_line_error(tmp_path):
+    (tmp_path / "BENCH_broken.json").write_text("{not json")
+    r = _run("--root", str(tmp_path), "broken")
+    assert r.returncode == 2
+    lines = [ln for ln in r.stderr.splitlines() if ln.strip()]
+    assert len(lines) == 1
+    assert lines[0].startswith("error:")
+    assert "BENCH_broken.json" in lines[0]
+    assert "Traceback" not in r.stderr
+
+
+def test_valid_file_without_baseline_passes(tmp_path):
+    doc = {
+        "mode": "fake",
+        "rows": [{"name": "fake_row", "us_per_call": 1.0, "derived": "speedup=2.00x"}],
+    }
+    (tmp_path / "BENCH_fake.json").write_text(json.dumps(doc))
+    r = _run("--root", str(tmp_path), "fake")
+    assert r.returncode == 0, r.stderr
+    assert "no baseline" in r.stdout
+
+
+def test_default_glob_still_checks_repo_files():
+    """Without positional modes the committed BENCH files are compared to
+    HEAD — the committed numbers must never regress against themselves."""
+    r = _run()
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "checked" in r.stdout

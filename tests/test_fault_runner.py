@@ -1,0 +1,118 @@
+"""``runtime/fault.py`` unit coverage on plain numpy trees: FaultInjector
+schedules (fail_at budgets, slow_at stalls), checkpoint/restore-and-replay
+determinism, retry exhaustion, and straggler detection — without the full
+model/optimizer stack test_fault_tolerance.py drives."""
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import latest_step, list_steps
+from repro.runtime.fault import FaultInjector, RunnerConfig, TrainRunner
+
+
+def _step_fn(params, opt_state, batch):
+    # deterministic in (params, step): replay after restore is bit-exact
+    w = params["w"] + batch["x"]
+    return {"w": w}, {"m": opt_state["m"] * 0.9 + batch["x"].sum()}, {
+        "loss": float(w.sum())
+    }
+
+
+def _batch_fn(step):
+    return {"x": np.full(4, float(step + 1))}
+
+
+def _fresh():
+    return {"w": np.zeros(4)}, {"m": np.float64(0.0)}
+
+
+def _runner(tmp_path, **kw):
+    cfg = RunnerConfig(ckpt_dir=str(tmp_path), ckpt_every=5, max_retries_per_step=3)
+    return TrainRunner(cfg, _step_fn, _batch_fn, **kw)
+
+
+# ------------------------------------------------------------ FaultInjector
+def test_fault_injector_fails_exactly_budget_times():
+    inj = FaultInjector(fail_at={3: 2})
+    inj(0)
+    inj(2)  # non-listed steps pass silently
+    with pytest.raises(RuntimeError, match="step 3"):
+        inj(3)
+    with pytest.raises(RuntimeError):
+        inj(3)
+    inj(3)  # budget of 2 exhausted — third visit passes
+    assert inj.fail_budget[3] == 0
+
+
+def test_fault_injector_slow_at_sleeps(monkeypatch):
+    naps = []
+    monkeypatch.setattr("time.sleep", naps.append)
+    inj = FaultInjector(slow_at={2: 0.25})
+    inj(1)
+    inj(2)
+    assert naps == [0.25]
+
+
+# ----------------------------------------------------- restore-and-replay
+def test_failure_replays_from_checkpoint_bit_exact(tmp_path):
+    params, opt = _fresh()
+    clean_p, clean_o = _runner(tmp_path / "clean").run(params, opt, 12)
+
+    inj = FaultInjector(fail_at={7: 1})
+    r = _runner(tmp_path / "faulty", fault_hook=inj)
+    params, opt = _fresh()
+    fault_p, fault_o = r.run(params, opt, 12)
+
+    np.testing.assert_array_equal(fault_p["w"], clean_p["w"])
+    np.testing.assert_array_equal(fault_o["m"], clean_o["m"])
+    assert r.restores == 1
+    # the failed attempt is recorded at the step the runner restored to
+    # (checkpoint at 5), and the replay re-runs steps 5 and 6
+    retried = [s for s in r.history if s.retried]
+    assert [s.step for s in retried] == [5]
+    steps = [s.step for s in r.history]
+    assert steps.count(5) == 2 and steps.count(6) == 2 and steps.count(7) == 1
+
+
+def test_retry_exhaustion_reraises(tmp_path):
+    inj = FaultInjector(fail_at={2: 99})
+    r = _runner(tmp_path, fault_hook=inj)
+    params, opt = _fresh()
+    with pytest.raises(RuntimeError, match="step 2"):
+        r.run(params, opt, 10)
+    # 1 initial attempt + max_retries_per_step retries, each burning budget
+    assert inj.fail_budget[2] == 99 - (1 + r.cfg.max_retries_per_step)
+
+
+# -------------------------------------------------- save/restore round-trip
+def test_checkpoint_cadence_and_resume_round_trip(tmp_path):
+    r = _runner(tmp_path)
+    params, opt = _fresh()
+    params, opt = r.run(params, opt, 10)
+    assert list_steps(str(tmp_path)) == [5, 10]
+    assert latest_step(str(tmp_path)) == 10
+
+    # a fresh runner restores step 10 and resumes to 12...
+    r2 = _runner(tmp_path)
+    step, tree = r2._restore(*_fresh())
+    assert step == 10
+    np.testing.assert_array_equal(tree["params"]["w"], params["w"])
+    np.testing.assert_array_equal(tree["opt"]["m"], opt["m"])
+    p12, o12 = r2.run(tree["params"], tree["opt"], 12, start_step=step)
+
+    # ...and lands exactly where an uninterrupted 12-step run lands
+    clean_p, clean_o = _runner(tmp_path / "clean").run(*_fresh(), 12)
+    np.testing.assert_array_equal(p12["w"], clean_p["w"])
+    np.testing.assert_array_equal(o12["m"], clean_o["m"])
+
+
+# --------------------------------------------------------------- stragglers
+def test_straggler_detection_fires_callback(tmp_path):
+    inj = FaultInjector(slow_at={6: 0.05})
+    seen = []
+    r = _runner(tmp_path, fault_hook=inj, on_straggler=seen.append)
+    params, opt = _fresh()
+    r.run(params, opt, 10)
+    assert [s.step for s in seen] == [6]
+    assert seen[0].straggler and seen[0].seconds >= 0.05
+    assert len(r.history) == 10

@@ -1,0 +1,146 @@
+"""Perfetto trace export: structure of the generated JSON, the schema
+validator used by CI, and the round-trip through ``write_trace``."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.cim import FabricTopology, allocate, allocate_placed
+from repro.core.cim.simulate import CLOCK_HZ
+from repro.fabric import FabricSim, PoissonOpen
+from repro.obs import build_trace, validate_trace, write_trace
+
+
+@pytest.fixture(scope="module")
+def traced_run(profiled):
+    spec, prof = profiled("vgg11", n_images=1, sample_patches=64)
+    alloc = allocate(spec, prof, "weight_based", spec.min_pes() * 2)
+    proc = PoissonOpen(n_requests=12, rate_per_cycle=2000.0 / CLOCK_HZ, seed=5)
+    sim = FabricSim(spec, prof, alloc, seed=3, record_timeline=True, stats=True)
+    return spec, sim, sim.run(proc)
+
+
+def test_build_trace_structure(traced_run):
+    spec, sim, res = traced_run
+    trace = build_trace(sim, res)
+    assert trace["displayTimeUnit"] == "ms"
+    evs = trace["traceEvents"]
+    phases = {e["ph"] for e in evs}
+    assert phases == {"M", "B", "E"}
+    # every track got a name, the lone process is "fabric" + "requests"
+    pnames = {
+        e["args"]["name"] for e in evs if e["ph"] == "M" and e["name"] == "process_name"
+    }
+    assert pnames == {"fabric", "requests"}
+    b = [e for e in evs if e["ph"] == "B"]
+    e_ = [e for e in evs if e["ph"] == "E"]
+    assert len(b) == len(e_) > 0
+    # request tracks cover every (request, stage) residence span
+    req = [x for x in b if x["pid"] == 1_000_000]
+    assert len(req) == res.stats.stage_entry.size
+    ts = [x["ts"] for x in evs if x["ph"] in "BE"]
+    assert ts == sorted(ts)  # globally time-ordered
+    assert validate_trace(trace) == len(b)
+
+
+def test_build_trace_chip_processes(profiled):
+    """With a placement, lanes group into one Perfetto process per chip."""
+    spec, prof = profiled("vgg11", n_images=1, sample_patches=64)
+    pes = spec.min_pes() * 2
+    topo = FabricTopology.split(4, pes + (-pes) % 4, link_gbps=16.0)
+    placed = allocate_placed(spec, prof, "blockwise", topo)
+    proc = PoissonOpen(n_requests=8, rate_per_cycle=2000.0 / CLOCK_HZ, seed=5)
+    sim = FabricSim(
+        spec, prof, placed.allocation, seed=3,
+        record_timeline=True, stats=True, placement=placed.placement,
+    )
+    res = sim.run(proc)
+    trace = build_trace(sim, res, placement=placed.placement)
+    pnames = {
+        e["args"]["name"]
+        for e in trace["traceEvents"]
+        if e["ph"] == "M" and e["name"] == "process_name"
+    }
+    assert "requests" in pnames
+    assert len(pnames - {"requests"}) > 1  # lanes spread over >1 chip
+    assert all(n.startswith("chip") for n in sorted(pnames - {"requests"}))
+    validate_trace(trace)
+
+
+def test_merge_gap_coalesces_spans(traced_run):
+    spec, sim, res = traced_run
+    dense = build_trace(sim, res)
+    merged = build_trace(sim, res, merge_gap=float("inf"))
+    n_dense = sum(1 for e in dense["traceEvents"] if e["ph"] == "B")
+    n_merged = sum(1 for e in merged["traceEvents"] if e["ph"] == "B")
+    assert n_merged < n_dense  # lanes collapse to one span per lane
+    validate_trace(merged)
+
+
+def test_max_requests_caps_request_tracks(traced_run):
+    spec, sim, res = traced_run
+    trace = build_trace(sim, res, max_requests=3)
+    req_tids = {
+        e["tid"]
+        for e in trace["traceEvents"]
+        if e["ph"] == "B" and e["pid"] == 1_000_000
+    }
+    assert len(req_tids) == 3
+
+
+def test_write_trace_round_trip(tmp_path, traced_run):
+    spec, sim, res = traced_run
+    p = tmp_path / "trace.json"
+    write_trace(build_trace(sim, res), p)
+    loaded = json.loads(p.read_text())
+    assert validate_trace(loaded) > 0
+
+
+# ----------------------------------------------------- validator negatives
+def _pair(ts0, ts1, pid=1, tid=1, name="x"):
+    return [
+        {"ph": "B", "name": name, "pid": pid, "tid": tid, "ts": ts0},
+        {"ph": "E", "name": name, "pid": pid, "tid": tid, "ts": ts1},
+    ]
+
+
+def test_validate_rejects_non_object():
+    with pytest.raises(ValueError, match="traceEvents"):
+        validate_trace([])
+    with pytest.raises(ValueError, match="list"):
+        validate_trace({"traceEvents": "nope"})
+
+
+def test_validate_rejects_backwards_timestamps():
+    evs = _pair(0.0, 5.0) + _pair(3.0, 4.0)  # second B jumps back in time
+    with pytest.raises(ValueError, match="backwards"):
+        validate_trace({"traceEvents": evs})
+
+
+def test_validate_rejects_unmatched_events():
+    open_b = {"ph": "B", "name": "x", "pid": 1, "tid": 1, "ts": 0.0}
+    with pytest.raises(ValueError, match="never closed"):
+        validate_trace({"traceEvents": [open_b]})
+    stray_e = {"ph": "E", "name": "x", "pid": 1, "tid": 1, "ts": 0.0}
+    with pytest.raises(ValueError, match="no open B"):
+        validate_trace({"traceEvents": [stray_e]})
+    wrong_name = [
+        {"ph": "B", "name": "a", "pid": 1, "tid": 1, "ts": 0.0},
+        {"ph": "E", "name": "b", "pid": 1, "tid": 1, "ts": 1.0},
+    ]
+    with pytest.raises(ValueError, match="closes"):
+        validate_trace({"traceEvents": wrong_name})
+
+
+def test_validate_rejects_missing_fields():
+    with pytest.raises(ValueError, match="missing"):
+        validate_trace({"traceEvents": [{"ph": "B", "name": "x", "ts": 0.0}]})
+
+
+def test_validate_skips_metadata_and_counters():
+    evs = [
+        {"ph": "M", "name": "process_name", "pid": 1, "args": {"name": "p"}},
+        {"ph": "C", "name": "occupancy", "pid": 1, "ts": 0.0, "args": {"v": 1}},
+    ] + _pair(0.0, 1.0)
+    assert validate_trace({"traceEvents": evs}) == 1
