@@ -19,6 +19,11 @@ A metric FAILS when it is worse than baseline by more than ``--tolerance``
 only the speedup ratios (self-normalizing); pass ``--strict-timing`` to
 also enforce the raw ``us_per_call`` timings.
 
+Some headline metrics are REQUIRED (``_REQUIRED``): the fused-DSE bench
+must always report its ``end_to_end_speedup`` ratio — a fused bench that
+silently stops reporting the acceptance number is a broken guard, so its
+absence is a hard error (exit 2), not a skipped comparison.
+
   PYTHONPATH=src python benchmarks/check_drift.py             # vs HEAD
   python benchmarks/check_drift.py --base HEAD~1 --tolerance 0.15
 """
@@ -36,6 +41,9 @@ REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 # metric keys may contain '@' and '.' (retention8chip@64gbps=1.00x); value
 # must end in 'x' so latency/ms fields never match
 _SPEEDUP = re.compile(r"([\w.@]+)=([0-9.]+)x")
+# headline keys that must exist whenever the file is checked; the file
+# itself is mandatory in default-glob (nightly) runs
+_REQUIRED = {"BENCH_dse_fused.json": ("end_to_end_speedup",)}
 
 
 def _baseline(ref: str, name: str) -> dict | None:
@@ -103,6 +111,14 @@ def main(argv=None) -> int:
                 return 2
     else:
         paths = sorted(args.root.glob("BENCH_*.json"))
+        for fname in sorted(_REQUIRED):
+            if not (args.root / fname).is_file():
+                print(
+                    f"error: required {fname} missing under {args.root} "
+                    f"(run: python -m benchmarks.run --json {fname[6:-5]})",
+                    file=sys.stderr,
+                )
+                return 2
 
     failures, checked = [], 0
     for path in paths:
@@ -111,11 +127,20 @@ def main(argv=None) -> int:
         except (OSError, json.JSONDecodeError) as e:
             print(f"error: cannot read {path.name}: {e}", file=sys.stderr)
             return 2
+        fresh = _metrics(cur, args.strict_timing)
+        for req in _REQUIRED.get(path.name, ()):
+            if not any(k.endswith(f".{req}") for k in fresh):
+                print(
+                    f"error: {path.name} lacks required headline metric "
+                    f"{req!r} in its derived strings",
+                    file=sys.stderr,
+                )
+                return 2
         base = _baseline(args.base, path.name)
         if base is None:
             print(f"{path.name}: no baseline at {args.base}, skipping")
             continue
-        cm = _metrics(cur, args.strict_timing)
+        cm = fresh
         bm = _metrics(base, args.strict_timing)
         # a baseline key absent from the fresh run (renamed bench row,
         # changed grid size in the name) silently disables its guard — say

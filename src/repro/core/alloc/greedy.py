@@ -29,6 +29,7 @@ __all__ = [
     "erlang_c",
     "greedy_allocate",
     "greedy_allocate_batch",
+    "greedy_batch_kernel",
     "greedy_allocate_placed",
     "place_extras",
     "proportional_allocate",
@@ -351,8 +352,16 @@ class BatchAllocationResult:
 _GREEDY_BATCH_JIT: dict = {}
 
 
-def _greedy_batch_kernel():
-    """Build (once) the jitted lock-step batched greedy kernel.
+def greedy_batch_kernel(base, cost, budget, r0):
+    """The lock-step batched greedy as a TRACEABLE jax function.
+
+    (C, N) ``base`` latencies / ``cost`` per replica, (C,) ``budget``,
+    (C, N) ``r0`` initial replicas -> (replicas (C, N) float, leftover (C,)).
+    Plain jax ops end to end, so callers may either jit it standalone
+    (``greedy_allocate_batch``) or inline it inside a larger traced program
+    — the fused DSE pipeline (``repro.dse.fused``) calls it between the
+    in-graph profile derivation and the vmapped throughput kernel, with no
+    host round-trip on either side.
 
     Two phases, both exactly replicating the scalar heap loop:
 
@@ -373,51 +382,55 @@ def _greedy_batch_kernel():
     import jax
     import jax.numpy as jnp
 
-    def kernel(base, cost, budget, r0):
-        N = base.shape[1]
+    N = base.shape[1]
 
-        def r_of(lam):
-            return jnp.maximum(r0, jnp.ceil(base / lam[:, None]))
+    def r_of(lam):
+        return jnp.maximum(r0, jnp.ceil(base / lam[:, None]))
 
-        def spend_of(r):
-            return ((r - r0) * cost).sum(axis=1)
+    def spend_of(r):
+        return ((r - r0) * cost).sum(axis=1)
 
-        lat0 = base / r0
-        hi = jnp.maximum(lat0.max(axis=1), 1e-300)  # degenerate all-zero rows
-        min_cost = cost.min(axis=1)
-        # strictly below the final greedy makespan -> provably infeasible
-        lo = hi / (2.0 * (2.0 + jnp.maximum(budget, 0.0) / min_cost))
+    lat0 = base / r0
+    hi = jnp.maximum(lat0.max(axis=1), 1e-300)  # degenerate all-zero rows
+    min_cost = cost.min(axis=1)
+    # strictly below the final greedy makespan -> provably infeasible
+    lo = hi / (2.0 * (2.0 + jnp.maximum(budget, 0.0) / min_cost))
 
-        def bisect(_, lohi):
-            lo, hi = lohi
-            mid = 0.5 * (lo + hi)
-            feasible = spend_of(r_of(mid)) <= budget
-            return jnp.where(feasible, lo, mid), jnp.where(feasible, mid, hi)
+    def bisect(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        feasible = spend_of(r_of(mid)) <= budget
+        return jnp.where(feasible, lo, mid), jnp.where(feasible, mid, hi)
 
-        lo, hi = jax.lax.fori_loop(0, 80, bisect, (lo, hi))
-        r = r_of(hi * (1.0 + 1e-9))
-        rem = budget - spend_of(r)
+    lo, hi = jax.lax.fori_loop(0, 80, bisect, (lo, hi))
+    r = r_of(hi * (1.0 + 1e-9))
+    rem = budget - spend_of(r)
 
-        idx = jnp.arange(N)
+    idx = jnp.arange(N)
 
-        def not_done(state):
-            return ~state[2].all()
+    def not_done(state):
+        return ~state[2].all()
 
-        def grant(state):
-            r, rem, done = state
-            lat = base / r
-            i = lat.argmax(axis=1)  # first max == scalar heap tie order
-            ci = jnp.take_along_axis(cost, i[:, None], axis=1)[:, 0]
-            ok = (ci <= rem) & ~done
-            r = r + ((idx[None, :] == i[:, None]) & ok[:, None])
-            rem = rem - jnp.where(ok, ci, 0.0)
-            return r, rem, done | ~ok
+    def grant(state):
+        r, rem, done = state
+        lat = base / r
+        i = lat.argmax(axis=1)  # first max == scalar heap tie order
+        ci = jnp.take_along_axis(cost, i[:, None], axis=1)[:, 0]
+        ok = (ci <= rem) & ~done
+        r = r + ((idx[None, :] == i[:, None]) & ok[:, None])
+        rem = rem - jnp.where(ok, ci, 0.0)
+        return r, rem, done | ~ok
 
-        done = jnp.zeros(base.shape[0], dtype=bool)
-        r, rem, done = jax.lax.while_loop(not_done, grant, (r, rem, done))
-        return r, rem
+    done = jnp.zeros(base.shape[0], dtype=bool)
+    r, rem, done = jax.lax.while_loop(not_done, grant, (r, rem, done))
+    return r, rem
 
-    return jax.jit(kernel)
+
+def _greedy_batch_kernel():
+    """Build (once) the standalone jitted entry over ``greedy_batch_kernel``."""
+    import jax
+
+    return jax.jit(greedy_batch_kernel)
 
 
 def greedy_allocate_batch(

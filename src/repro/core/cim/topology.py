@@ -73,6 +73,7 @@ __all__ = [
     "allocate_placed",
     "place_allocation",
     "request_bytes",
+    "stage_transfer_matrix",
 ]
 
 
@@ -256,6 +257,18 @@ class PlacedAllocation:
 
     allocation: Allocation
     placement: Placement
+
+
+def stage_transfer_matrix(placements) -> np.ndarray:
+    """Pack P placements' per-stage entry delays into one (P, L) float64
+    matrix — the batchable placement axis the fused DSE pipeline feeds to
+    the virtual-time kernel (one vmapped fabric call across placements
+    instead of a Python loop over topologies)."""
+    return np.ascontiguousarray(
+        np.stack(
+            [np.asarray(p.stage_transfer, dtype=np.float64) for p in placements]
+        )
+    )
 
 
 # --------------------------------------------------------------- internals

@@ -11,6 +11,14 @@ fabric at its own operating load, so frontiers can rank on
 """
 
 from .engine import AllocationBatch, allocate_batch, run_batch, to_allocation
+from .fused import (
+    FusedChipSweepResult,
+    FusedPipeline,
+    clear_fused_caches,
+    get_fused_pipeline,
+    run_fused_multichip_sweep,
+    run_fused_sweep,
+)
 from .pareto import (
     DEFAULT_OBJECTIVES,
     LATENCY_OBJECTIVES,
@@ -38,6 +46,12 @@ __all__ = [
     "allocate_batch",
     "run_batch",
     "to_allocation",
+    "FusedChipSweepResult",
+    "FusedPipeline",
+    "clear_fused_caches",
+    "get_fused_pipeline",
+    "run_fused_multichip_sweep",
+    "run_fused_sweep",
     "DEFAULT_OBJECTIVES",
     "LATENCY_OBJECTIVES",
     "MULTICHIP_OBJECTIVES",

@@ -1,0 +1,945 @@
+"""One-jit fused DSE pipeline: profile-derive -> allocate -> evaluate.
+
+The staged sweep (``run_sweep``) dispatches three separately-jitted stages
+per (network, array) group — host-side ``derive_profile`` views per ADC
+variant, the lock-step batched allocators, and the vmapped throughput
+kernel — with host round-trips (and profile-cache traffic) between every
+pair.  This module fuses them: ONE traced program per (network,
+rows-geometry) group derives the per-ADC bit-plane cycle banks from the
+shared ``capture_activations`` capture *inside the graph*
+(``kernels.bitplane_profile.bitplane_cycle_bank``: shift-and-mask popcount
++ multi-ADC zero-skip re-costing), runs the traceable batched greedy
+(``core.alloc.greedy.greedy_batch_kernel``), and feeds the vmapped
+``_eval_kernel`` — so a whole (ADC x policy x PE-budget) config tensor
+evaluates with no host round-trips between the stages.  Configs partition
+by ALLOCATION FAMILY (proportional / layer-greedy / block-greedy, a static
+``kind`` per compiled program) so the serial lock-step greedy only runs
+over the configs that need it — the same partitions the staged
+``allocate_batch`` forms, but fused end-to-end and spanning every ADC
+variant per dispatch instead of one dispatch per (geometry, ADC, family).
+
+Equivalence contract (pinned by tests/test_fused_dse.py): every DISCRETE
+column — replica tensors, arrays used/total, chip crossings — is exactly
+equal to the staged path, and every float-derived column (total cycles,
+throughput, utilization, latency percentiles) agrees to <= 1e-12 relative,
+with the observed wobble at the last ULP (~2e-16).  Why not full
+bit-identity:
+
+  * cycle samples are integer-valued float64, so any summation order gives
+    the exact integer sum (all partials < 2^53), and each per-block mean is
+    that exact sum divided once by the patch count — bit-equal to
+    ``_pack_profile``'s.  The greedy allocators then run the very same
+    kernel body on those bit-equal inputs, which is why the replica
+    tensors are EXACTLY equal, not merely close;
+  * but the staged and fused evaluators are *different XLA programs*, and
+    op-fusion choices between two compilations can shift the last ULP of
+    the rounded mean->multiply->divide chains (observed: 1 config in 24 on
+    a ResNet18 grid, 1.9e-16 relative in total cycles).  ``busy_sum``
+    additionally sums the rounded per-block means in whatever reduction
+    order each backend picks.  Float columns are therefore compared at
+    rtol 1e-12 — four orders looser than the ULP wobble, tight enough that
+    any real formula drift fails;
+  * the greedy allocators run the very same kernel body on bit-equal base
+    latencies, so replica vectors are exactly equal;
+  * the proportional policies read NO profile data (MACs only), so their
+    replica vectors are precomputed host-side with the same
+    largest-remainder routine the staged path uses (this also sidesteps
+    argsort tie-order differences between numpy and XLA) and enter the
+    graph as config constants;
+  * ``latency_aware`` is load-coupled and scalar by construction — it stays
+    on the staged path and is rejected here.
+
+``FusedPipeline.fabric_percentiles`` extends the fusion to the serving
+side: the per-ADC cycle banks feed the ``lax.scan`` virtual-time kernel
+through per-config (ADC, zskip, dataflow) gathers, so one vmapped fabric
+call spans sub-batches that the staged ``VirtualTimeFabric`` would split
+per (network, array) group.  ``run_fused_multichip_sweep`` lifts
+``run_multichip_sweep``'s per-placement Python loop into a batchable
+placement x load axis over the same kernel.
+
+Scale-out: ``shard=True`` routes the fused program through
+``distrib.sharding.shard_map_batch`` — the config axis splits across the
+host's local devices, results identical to the unsharded path.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..core.alloc.greedy import greedy_batch_kernel, proportional_allocate_batch
+from ..core.cim.cost import ArrayConfig, DEFAULT_ARRAY, baseline_cycles
+from ..core.cim.network import NetworkSpec
+from ..core.cim.profile import ActivationCapture
+from ..core.cim.simulate import (
+    ARRAYS_PER_PE,
+    CLOCK_HZ,
+    _eval_kernel,
+)
+from ..core.cim.topology import allocate_placed, stage_transfer_matrix
+from .sweep import (
+    ChipSweepPoint,
+    FabricEval,
+    SweepPoint,
+    SweepResult,
+    _spec_for,
+    get_captured,
+    get_profiled,
+)
+
+__all__ = [
+    "FusedPipeline",
+    "FusedChipSweepResult",
+    "get_fused_pipeline",
+    "clear_fused_caches",
+    "run_fused_sweep",
+    "run_fused_multichip_sweep",
+]
+
+_PROPORTIONAL = ("baseline", "weight_based", "weight_blockflow")
+_LAYERWISE_FLOW = ("baseline", "weight_based", "perf_layerwise")
+_FUSED_POLICIES = _PROPORTIONAL + ("perf_layerwise", "blockwise")
+_KIND = {p: 0 for p in _PROPORTIONAL}
+_KIND["perf_layerwise"] = 1
+_KIND["blockwise"] = 2
+
+_PIPELINE_CACHE: dict[tuple, "FusedPipeline"] = {}
+
+
+def _canonical(array: ArrayConfig) -> ArrayConfig:
+    """The rows-geometry key: ADC precision is a config axis INSIDE a fused
+    group (it never changes block shapes), so strip it for grouping."""
+    return array.variant(adc_bits=DEFAULT_ARRAY.adc_bits)
+
+
+class FusedPipeline:
+    """Fused derive->allocate->eval for one (network, rows-geometry) group.
+
+    ``adc_bits`` is the group's ADC axis: per-config ``a_idx`` selects a
+    variant in-graph.  All other ``ArrayConfig`` fields come from
+    ``base_array`` and are part of the group identity (they change block
+    shapes)."""
+
+    def __init__(
+        self,
+        network: str,
+        base_array: ArrayConfig,
+        adc_bits: tuple[int, ...],
+        *,
+        profile_images: int = 1,
+        sample_patches: int = 128,
+        seed: int = 0,
+        arrays_per_pe: int = ARRAYS_PER_PE,
+        shard: bool = False,
+    ):
+        self.network = network
+        self.adc_bits = tuple(int(a) for a in adc_bits)
+        if len(set(self.adc_bits)) != len(self.adc_bits):
+            raise ValueError(f"duplicate adc_bits {adc_bits}")
+        self.base_array = _canonical(base_array)
+        self.variants = tuple(
+            self.base_array.variant(adc_bits=a) for a in self.adc_bits
+        )
+        self.arrays_per_pe = int(arrays_per_pe)
+        self.shard = bool(shard)
+        self.spec: NetworkSpec = _spec_for(network, self.base_array)
+        self.capture: ActivationCapture = get_captured(
+            network,
+            profile_images=profile_images,
+            sample_patches=sample_patches,
+            seed=seed,
+        )
+        self._prof_kw = dict(
+            profile_images=profile_images,
+            sample_patches=sample_patches,
+            seed=seed,
+        )
+        self._build_static()
+        self._compiled: dict[tuple, object] = {}
+        self._fabric_compiled: dict[tuple, object] = {}
+
+    # ------------------------------------------------------------ host prep
+    def _build_static(self) -> None:
+        spec, cap = self.spec, self.capture
+        L = len(spec.layers)
+        B = max(l.n_blocks for l in spec.layers)
+        R = self.base_array.rows
+        self.S_l = [c.sampled_q.shape[0] for c in cap.layers]
+        S = max(self.S_l)
+        self.L, self.B, self.S = L, B, S
+        # zero-padded (L, B, S, R) uint8 block tensor: padded rows/blocks/
+        # samples contribute no '1' bits and are masked out after costing
+        Q = np.zeros((L, B, S, R), dtype=np.uint8)
+        s_mask = np.zeros((L, S), dtype=bool)
+        b_mask = np.zeros((L, B), dtype=bool)
+        for li, (layer, c) in enumerate(zip(spec.layers, cap.layers)):
+            s = c.sampled_q.shape[0]
+            s_mask[li, :s] = True
+            b_mask[li, : layer.n_blocks] = True
+            for bi, sl in enumerate(layer.block_row_slices()):
+                Q[li, bi, :s, : sl.stop - sl.start] = c.sampled_q[:, sl]
+        self.Q = Q
+        self.s_mask = s_mask
+        self.b_mask = b_mask
+        self.s_count = s_mask.sum(axis=1).astype(np.float64)
+        self.ppi = np.array(
+            [l.patches_per_image for l in spec.layers], dtype=np.float64
+        )
+        self.width = np.array(
+            [l.arrays_per_block for l in spec.layers], dtype=np.float64
+        )
+        self.layer_arrays = np.array(
+            [l.n_arrays for l in spec.layers], dtype=np.float64
+        )
+        self.macs = np.array(
+            [l.macs_per_image for l in spec.layers], dtype=np.float64
+        )
+        self.base_arrays = spec.n_arrays
+        table = spec.block_table()  # (N, 3): layer, block-in-layer, width
+        self.l_idx = table[:, 0].copy()
+        self.blk_idx = table[:, 1].copy()
+        self.cost_blk = table[:, 2].astype(np.float64)
+        self.N = table.shape[0]
+        # baseline (zskip OFF) statistics are capture-independent geometry
+        # constants; computed with the exact ops _pack_profile applies to
+        # its variant-0 slice so they are bit-equal to the staged banks
+        A = len(self.variants)
+        cyc0 = np.zeros((A, L, S, B))
+        self.baseline_lb = np.zeros((A, L, B))
+        for ai, v in enumerate(self.variants):
+            for li, layer in enumerate(spec.layers):
+                sl = layer.block_row_slices()
+                base = baseline_cycles(
+                    np.asarray([s.stop - s.start for s in sl]), v
+                ).astype(np.float64)
+                self.baseline_lb[ai, li, : layer.n_blocks] = base
+                cyc0[ai, li, : self.S_l[li], : layer.n_blocks] = base
+        self.mean0 = cyc0.sum(axis=2) / self.s_count[None, :, None]
+        self.max0 = cyc0.max(axis=2)
+        pmax0 = np.where(b_mask[None, :, None, :], cyc0, -np.inf).max(axis=3)
+        self.pm_mean0 = (
+            np.where(s_mask, pmax0, 0.0).sum(axis=2) / self.s_count[None, :]
+        )
+        self.pm_max0 = np.where(s_mask, pmax0, -np.inf).max(axis=2)
+        self.busy0 = np.where(b_mask[None], self.mean0, 0.0).sum(axis=2)
+
+    # --------------------------------------------------------- traced program
+    def _fn(self, kind: int, n_images: int, clock_hz: float, return_bank: bool):
+        key = (kind, n_images, clock_hz, return_bank)
+        if key in self._compiled:
+            return self._compiled[key]
+        import functools
+
+        import jax
+        import jax.numpy as jnp
+
+        from ..kernels.bitplane_profile import bitplane_cycle_bank
+
+        if return_bank and self.shard:
+            raise ValueError(
+                "return_bank is unavailable on the sharded pipeline (the "
+                "bank's leading axis is the ADC variant, not the config "
+                "batch) — use bank() or an unsharded pipeline"
+            )
+        rows_per_read = tuple(v.rows_per_read for v in self.variants)
+        cpr = self.base_array.cycles_per_read
+        Q, s_mask, b_mask = self.Q, self.s_mask, self.b_mask
+        s_count, ppi = self.s_count, self.ppi
+        width, layer_arrays = self.width, self.layer_arrays
+        l_idx, blk_idx, cost_blk = self.l_idx, self.blk_idx, self.cost_blk
+        mean0, max0 = self.mean0, self.max0
+        pm_mean0, pm_max0, busy0 = self.pm_mean0, self.pm_max0, self.busy0
+        base_arrays, L, B, N = self.base_arrays, self.L, self.B, self.N
+
+        def fused(Q, budgets, a_idx, zskip, layerwise, dups0):
+            C = budgets.shape[0]
+            # ---- stage 1: in-graph per-ADC profile derivation -----------
+            bank = bitplane_cycle_bank(
+                jnp.asarray(Q), rows_per_read, cycles_per_read=cpr
+            )  # (A, L, B, S) int32
+            valid = s_mask[None, :, None, :] & b_mask[None, :, :, None]
+            cyc = jnp.where(valid, bank, 0).astype(jnp.float64)
+            cyc = jnp.swapaxes(cyc, 2, 3)  # (A, L, S, B), 0-padded
+            mean_b1 = cyc.sum(axis=2) / s_count[None, :, None]  # (A, L, B)
+            max_b1 = cyc.max(axis=2)
+            pmax1 = jnp.where(b_mask[None, :, None, :], cyc, -jnp.inf).max(axis=3)
+            pm_mean1 = (
+                jnp.where(s_mask, pmax1, 0.0).sum(axis=2) / s_count[None, :]
+            )
+            pm_max1 = jnp.where(s_mask, pmax1, -jnp.inf).max(axis=2)
+            busy1 = jnp.where(b_mask[None], mean_b1, 0.0).sum(axis=2)
+
+            # ---- stage 2: in-graph allocation ---------------------------
+            # `kind` is STATIC: each allocation family gets its own program,
+            # so the serial lock-step greedy only ever runs over configs
+            # that need it — mirroring the staged per-policy partitions
+            # instead of paying every allocator for every config
+            if kind == 1:  # perf_layerwise: greedy on expected layer latency
+                exp_lat = pm_mean1 * ppi[None, :]  # (A, L)
+                r_perf, _ = greedy_batch_kernel(
+                    exp_lat[a_idx],
+                    jnp.broadcast_to(jnp.asarray(layer_arrays), (C, L)),
+                    budgets,
+                    jnp.ones((C, L)),
+                )
+                dups_lb = jnp.broadcast_to(r_perf[:, :, None], (C, L, B))
+                used_f = (r_perf - 1.0) @ layer_arrays
+            elif kind == 2:  # blockwise: greedy on flat per-block units
+                base_blk = (mean_b1 * ppi[None, :, None])[:, l_idx, blk_idx]
+                r_blk, _ = greedy_batch_kernel(
+                    base_blk[a_idx],  # (C, N)
+                    jnp.broadcast_to(jnp.asarray(cost_blk), (C, N)),
+                    budgets,
+                    jnp.ones((C, N)),
+                )
+                dups_lb = jnp.ones((C, L, B)).at[:, l_idx, blk_idx].set(r_blk)
+                used_f = ((r_blk - 1.0) * cost_blk).sum(axis=1)
+            else:  # proportional: replicas are host-precomputed constants
+                dups_lb = jnp.broadcast_to(dups0[:, :, None], (C, L, B))
+                used_f = (dups0 - 1.0) @ layer_arrays
+            used = base_arrays + used_f.astype(jnp.int64)
+
+            # ---- stage 3: vmapped throughput/utilization kernel ---------
+            zc = zskip[:, None, None]
+            mean_c = jnp.where(zc, mean_b1[a_idx], jnp.asarray(mean0)[a_idx])
+            max_c = jnp.where(zc, max_b1[a_idx], jnp.asarray(max0)[a_idx])
+            zl = zskip[:, None]
+            pmn_c = jnp.where(zl, pm_mean1[a_idx], jnp.asarray(pm_mean0)[a_idx])
+            pmx_c = jnp.where(zl, pm_max1[a_idx], jnp.asarray(pm_max0)[a_idx])
+            busy_c = jnp.where(zl, busy1[a_idx], jnp.asarray(busy0)[a_idx])
+
+            eval_one = functools.partial(
+                _eval_kernel,
+                jnp,
+                b_mask=jnp.asarray(b_mask),
+                ppi=jnp.asarray(ppi),
+                width=jnp.asarray(width),
+                layer_arrays=jnp.asarray(layer_arrays),
+                n_images=n_images,
+                clock_hz=clock_hz,
+            )
+            T, ips, layer_T, util = jax.vmap(
+                lambda m, x, pn, px, bs, d, lw: eval_one(
+                    m, x, pn, px, bs, dups_lb=d, layerwise=lw
+                )
+            )(mean_c, max_c, pmn_c, pmx_c, busy_c, dups_lb, layerwise)
+            out = (T, ips, layer_T, util, dups_lb, used)
+            if return_bank:
+                out = out + (cyc,)
+            return out
+
+        if self.shard:
+            # shard_map_batch splits every positional arg along the config
+            # axis, so Q rides along as a closed-over replicated constant
+            # (XLA folds the popcount once per compilation)
+            from ..distrib.sharding import shard_map_batch
+
+            self._compiled[key] = shard_map_batch(
+                functools.partial(fused, Q)
+            )
+        else:
+            # unsharded: Q enters as a runtime operand — the popcount runs
+            # in-graph instead of being constant-folded at compile time
+            jitted = jax.jit(fused)
+            Qd = jnp.asarray(Q)
+            self._compiled[key] = lambda *a, _j=jitted, _q=Qd: _j(_q, *a)
+        return self._compiled[key]
+
+    def _validate(self, policies, n_pes):
+        policies = np.atleast_1d(np.asarray(policies, dtype=object))
+        n_pes = np.atleast_1d(np.asarray(n_pes, dtype=np.int64))
+        policies, n_pes = np.broadcast_arrays(policies, n_pes)
+        unknown = sorted({p for p in policies if p not in _FUSED_POLICIES})
+        if unknown:
+            raise ValueError(
+                f"unsupported policies {unknown} for the fused pipeline; "
+                f"choose from {_FUSED_POLICIES} ('latency_aware' is "
+                f"load-coupled — use the staged run_sweep)"
+            )
+        total = n_pes * self.arrays_per_pe
+        if np.any(total < self.base_arrays):
+            raise ValueError(
+                f"{int(total.min())} arrays < minimum {self.base_arrays} "
+                f"for {self.spec.name}"
+            )
+        return policies, n_pes, total
+
+    def __call__(
+        self,
+        a_idx,  # (C,) index into self.adc_bits
+        policies,  # (C,) policy names
+        n_pes,  # (C,) PE budgets
+        *,
+        n_images: int = 64,
+        clock_hz: float = CLOCK_HZ,
+        chunk: int = 32768,
+        return_bank: bool = False,
+    ):
+        """Evaluate C packed configs in one fused dispatch per chunk.
+
+        Returns a dict of numpy columns (total_cycles, images_per_sec,
+        layer_cycles, layer_utilization, dups_lb, layerwise, zskip,
+        arrays_used, arrays_total) plus ``bank`` (A, L, S, B) float64 when
+        ``return_bank`` — element-wise identical to the staged
+        ``allocate_batch`` + ``BatchSimulator`` outputs.
+        """
+        from jax.experimental import enable_x64
+
+        policies, n_pes, total = self._validate(policies, n_pes)
+        a_idx = np.broadcast_to(
+            np.atleast_1d(np.asarray(a_idx, dtype=np.int32)), policies.shape
+        ).copy()
+        if a_idx.size and (a_idx.min() < 0 or a_idx.max() >= len(self.adc_bits)):
+            raise ValueError(
+                f"a_idx out of range for {len(self.adc_bits)} ADC variants"
+            )
+        C = policies.shape[0]
+        budgets = (total - self.base_arrays).astype(np.float64)
+        kind = np.array([_KIND[p] for p in policies], dtype=np.int32)
+        zskip = policies != "baseline"
+        layerwise = np.isin(policies, _LAYERWISE_FLOW)
+        # proportional replicas are MACs-only config constants: precompute
+        # host-side with the staged routine (exact; and numpy argsort
+        # tie-order never has to match XLA's inside the graph)
+        dups0 = np.ones((C, self.L))
+        prop = kind == 0
+        if prop.any():
+            res = proportional_allocate_batch(
+                self.macs, self.layer_arrays, budgets[prop]
+            )
+            dups0[prop] = res.replicas.astype(np.float64)
+
+        outs = {
+            "total_cycles": np.zeros(C),
+            "images_per_sec": np.zeros(C),
+            "layer_cycles": np.zeros((C, self.L)),
+            "layer_utilization": np.zeros((C, self.L)),
+            "dups_lb": np.zeros((C, self.L, self.B)),
+            "arrays_used": np.zeros(C, dtype=np.int64),
+        }
+        bank = None
+        with enable_x64():
+            for k in (0, 1, 2):
+                rows = np.nonzero(kind == k)[0]
+                if rows.size == 0:
+                    continue
+                fn = self._fn(k, int(n_images), float(clock_hz), bool(return_bank))
+                csize = min(int(chunk), rows.size)
+                for j0 in range(0, rows.size, csize):
+                    part = rows[j0 : j0 + csize]
+                    pad = csize - part.size
+                    take = (
+                        part
+                        if pad == 0
+                        else np.concatenate([part, np.repeat(part[:1], pad)])
+                    )  # pad repeating row 0: one compilation per partition
+                    out = fn(
+                        budgets[take],
+                        a_idx[take],
+                        zskip[take],
+                        layerwise[take],
+                        dups0[take],
+                    )
+                    T, ips, layer_T, util, dups, used = out[:6]
+                    outs["total_cycles"][part] = np.asarray(T)[: part.size]
+                    outs["images_per_sec"][part] = np.asarray(ips)[: part.size]
+                    outs["layer_cycles"][part] = np.asarray(layer_T)[: part.size]
+                    outs["layer_utilization"][part] = np.asarray(util)[: part.size]
+                    outs["dups_lb"][part] = np.asarray(dups)[: part.size]
+                    outs["arrays_used"][part] = np.asarray(used)[: part.size]
+                    if return_bank and bank is None:
+                        bank = np.asarray(out[6])
+        outs["arrays_total"] = total
+        outs["layerwise"] = layerwise
+        outs["zskip"] = zskip
+        if return_bank:
+            outs["bank"] = bank
+        return outs
+
+    # ----------------------------------------------------- fused fabric stage
+    def _fabric_fn(self, n, D_by_layer, percentiles, has_xfer):
+        key = (n, tuple(D_by_layer), tuple(percentiles), has_xfer)
+        if key in self._fabric_compiled:
+            return self._fabric_compiled[key]
+        import functools
+
+        import jax
+        import jax.numpy as jnp
+
+        from ..fabric.vtime import run_fabric_kernel
+
+        cyc_banks = self._cyc_banks  # per layer (A, S_l, B_l) float64
+        base_banks = [
+            self.baseline_lb[:, li, : layer.n_blocks]
+            for li, layer in enumerate(self.spec.layers)
+        ]  # per layer (A, B_l)
+        job_scan = functools.partial(jax.lax.scan, unroll=1)
+
+        def one(frees, xfer, arrivals, a, z, lw, idx):
+            stages = []
+            for li in range(self.L):
+                c1 = jnp.asarray(cyc_banks[li])[a]  # (S_l, B_l)
+                c0 = jnp.broadcast_to(
+                    jnp.asarray(base_banks[li])[a][None, :], c1.shape
+                )
+                c = jnp.where(z, c1, c0)
+                b = c.shape[1]
+                onehot0 = jnp.arange(b) == 0
+                # layer-wise dataflow: the barrier collapses each patch to
+                # its slowest block, dispatched on pool 0 (identical to the
+                # staged per-group (S, 1) packing — max commutes with the
+                # service-index gather)
+                c_lw = jnp.where(
+                    onehot0[None, :], c.max(axis=1, keepdims=True), 0.0
+                )
+                stages.append(
+                    (
+                        jnp.where(lw, c_lw, c),
+                        jnp.where(lw, onehot0, jnp.ones(b, dtype=bool)),
+                    )
+                )
+            return run_fabric_kernel(
+                jnp,
+                jax.lax.scan,
+                tuple(stages),
+                frees,
+                arrivals,
+                idx,
+                None,
+                tuple(percentiles),
+                job_scan=job_scan,
+                xfer=xfer,
+            )
+
+        self._fabric_compiled[key] = jax.jit(
+            jax.vmap(
+                one,
+                in_axes=(0, 0 if has_xfer else None, 0, 0, 0, 0, None),
+            )
+        )
+        return self._fabric_compiled[key]
+
+    @property
+    def _cyc_banks(self):
+        banks = getattr(self, "_cyc_banks_cache", None)
+        if banks is None:
+            import jax
+            import jax.numpy as jnp
+            from jax.experimental import enable_x64
+
+            from ..kernels.bitplane_profile import bitplane_cycle_bank
+
+            rows_per_read = tuple(v.rows_per_read for v in self.variants)
+            s_mask, b_mask = self.s_mask, self.b_mask
+
+            def derive(Q):
+                bank = bitplane_cycle_bank(
+                    Q, rows_per_read,
+                    cycles_per_read=self.base_array.cycles_per_read,
+                )
+                valid = s_mask[None, :, None, :] & b_mask[None, :, :, None]
+                cyc = jnp.where(valid, bank, 0).astype(jnp.float64)
+                return jnp.swapaxes(cyc, 2, 3)  # (A, L, S, B)
+
+            with enable_x64():
+                full = np.asarray(jax.jit(derive)(self.Q))
+            banks = [
+                np.ascontiguousarray(
+                    full[:, li, : self.S_l[li], : layer.n_blocks]
+                )
+                for li, layer in enumerate(self.spec.layers)
+            ]
+            self._cyc_banks_cache = banks
+        return banks
+
+    def fabric_percentiles(
+        self,
+        a_idx: np.ndarray,  # (C,)
+        dups_lb: np.ndarray,  # (C, L, B) from the analytic stage
+        layerwise: np.ndarray,  # (C,) bool
+        zskip: np.ndarray,  # (C,) bool
+        arrival_times: np.ndarray,  # (C, n) cycles
+        *,
+        seed: int = 0,
+        qs: tuple = (50.0, 95.0, 99.0),
+        xfer: np.ndarray | None = None,  # (C, L) stage entry transfers
+        lane_quantum: int = 1,
+    ) -> np.ndarray:
+        """(C, len(qs)) latency percentiles through the fused virtual-time
+        kernel: per-config (ADC, zskip, dataflow) gathers against the
+        in-graph-derived cycle banks, one vmapped ``lax.scan`` call per
+        lane-homogeneous sub-batch.  Bit-identical to routing each config
+        through the staged ``VirtualTimeFabric``."""
+        from jax.experimental import enable_x64
+
+        from ..fabric.vtime import sample_service_indices
+
+        C, n = arrival_times.shape
+        a_idx = np.asarray(a_idx, dtype=np.int32)
+        lw = np.asarray(layerwise, dtype=bool)
+        z = np.asarray(zskip, dtype=bool)
+        dims = [(self.S_l[li], l.patches_per_image) for li, l in enumerate(self.spec.layers)]
+        idx = sample_service_indices(np.random.default_rng(seed), dims, n)
+        # effective lanes per (config, layer, pool): layer-wise configs pool
+        # everything on block 0
+        d_eff = []
+        for li, layer in enumerate(self.spec.layers):
+            b = layer.n_blocks
+            d = np.asarray(dups_lb[:, li, :b], dtype=np.int64)
+            d = np.where(
+                lw[:, None],
+                np.where(np.arange(b) == 0, dups_lb[:, li, :1].astype(np.int64), 0),
+                d,
+            )
+            d_eff.append(d)  # (C, B_l)
+        # bound lane padding: chain configs by their own scan cost, cutting
+        # when one exceeds 1.5x its sub-batch's first (the staged policy)
+        cost = np.zeros(C)
+        for li, layer in enumerate(self.spec.layers):
+            cost += layer.patches_per_image * layer.n_blocks * d_eff[li].max(axis=1)
+        order = np.argsort(cost, kind="stable")
+        subs: list[list[int]] = []
+        for j in order:
+            if subs and cost[j] <= 1.5 * max(cost[subs[-1][0]], 1.0):
+                subs[-1].append(int(j))
+            else:
+                subs.append([int(j)])
+        q = max(1, int(lane_quantum))
+        pcts = np.zeros((C, len(qs)))
+        with enable_x64():
+            for rows in subs:
+                r = np.asarray(rows)
+                frees = []
+                for li in range(self.L):
+                    d = d_eff[li][r]
+                    D = -(-max(int(d.max()), 1) // q) * q
+                    frees.append(
+                        np.where(np.arange(D) < d[:, :, None], 0.0, np.inf)
+                    )
+                fn = self._fabric_fn(
+                    n, [f.shape[2] for f in frees], qs, xfer is not None
+                )
+                out = fn(
+                    tuple(frees),
+                    None if xfer is None else xfer[r],
+                    arrival_times[r],
+                    a_idx[r],
+                    z[r],
+                    lw[r],
+                    tuple(idx),
+                )
+                t_arr, comp = np.asarray(out[0]), np.asarray(out[1])
+                # percentiles recomputed host-side from the bit-exact
+                # latencies, matching the staged sweep columns exactly
+                pcts[r] = np.percentile(comp - t_arr, qs, axis=1).T
+        return pcts
+
+
+def get_fused_pipeline(
+    network: str,
+    base_array: ArrayConfig,
+    adc_bits: tuple[int, ...],
+    *,
+    profile_images: int = 1,
+    sample_patches: int = 128,
+    seed: int = 0,
+    arrays_per_pe: int = ARRAYS_PER_PE,
+    shard: bool = False,
+) -> FusedPipeline:
+    """Cached ``FusedPipeline`` — compiled programs survive across sweeps."""
+    key = (
+        network,
+        _canonical(base_array),
+        tuple(int(a) for a in adc_bits),
+        profile_images,
+        sample_patches,
+        seed,
+        arrays_per_pe,
+        shard,
+    )
+    if key not in _PIPELINE_CACHE:
+        _PIPELINE_CACHE[key] = FusedPipeline(
+            network,
+            base_array,
+            adc_bits,
+            profile_images=profile_images,
+            sample_patches=sample_patches,
+            seed=seed,
+            arrays_per_pe=arrays_per_pe,
+            shard=shard,
+        )
+    return _PIPELINE_CACHE[key]
+
+
+def clear_fused_caches() -> None:
+    _PIPELINE_CACHE.clear()
+
+
+def run_fused_sweep(
+    points: list[SweepPoint],
+    *,
+    n_images: int = 64,
+    profile_images: int = 1,
+    sample_patches: int = 128,
+    seed: int = 0,
+    arrays_per_pe: int = ARRAYS_PER_PE,
+    fabric: FabricEval | None = None,
+    shard_devices: bool = False,
+    chunk: int = 32768,
+) -> SweepResult:
+    """Drop-in fused counterpart of ``run_sweep(engine="batch")``.
+
+    Groups points by (network, rows-geometry); each group's whole
+    (ADC x policy x PE-budget) config tensor runs through ONE fused jit
+    dispatch per chunk (derive -> allocate -> eval, no host round-trips),
+    optionally followed by the fused virtual-time stage for the latency
+    columns.  Results are element-wise identical to the staged path
+    (pinned by tests/test_fused_dse.py).  ``latency_aware`` points are
+    rejected — that policy is load-coupled and stays staged."""
+    C = len(points)
+    out = {
+        name: np.zeros(C)
+        for name in ("total_cycles", "images_per_sec", "mean_utilization")
+    }
+    used = np.zeros(C, dtype=np.int64)
+    total = np.zeros(C, dtype=np.int64)
+    pcts = np.full((C, 3), np.nan) if fabric is not None else None
+
+    groups: dict[tuple, list[int]] = {}
+    for i, p in enumerate(points):
+        groups.setdefault((p.network, _canonical(p.array)), []).append(i)
+
+    elapsed = 0.0
+    for (net, arr), rows in groups.items():
+        adcs = tuple(sorted({points[i].array.adc_bits for i in rows}))
+        pipe = get_fused_pipeline(
+            net,
+            arr,
+            adcs,
+            profile_images=profile_images,
+            sample_patches=sample_patches,
+            seed=seed,
+            arrays_per_pe=arrays_per_pe,
+            shard=shard_devices,
+        )
+        idx = np.asarray(rows)
+        a_idx = np.array(
+            [adcs.index(points[i].array.adc_bits) for i in rows], dtype=np.int32
+        )
+        pols = np.array([points[i].policy for i in rows], dtype=object)
+        pes = np.array([points[i].n_pes for i in rows], dtype=np.int64)
+        t0 = time.perf_counter()
+        res = pipe(a_idx, pols, pes, n_images=n_images, chunk=chunk)
+        out["total_cycles"][idx] = res["total_cycles"]
+        out["images_per_sec"][idx] = res["images_per_sec"]
+        out["mean_utilization"][idx] = res["layer_utilization"].mean(axis=1)
+        used[idx] = res["arrays_used"]
+        total[idx] = res["arrays_total"]
+        if fabric is not None:
+            gaps = np.random.default_rng(fabric.seed).exponential(
+                1.0, size=fabric.n_requests
+            )
+            rates = fabric.load_frac * res["images_per_sec"] / CLOCK_HZ
+            times = np.cumsum(gaps)[None, :] / rates[:, None]
+            pcts[idx] = pipe.fabric_percentiles(
+                a_idx,
+                res["dups_lb"],
+                res["layerwise"],
+                res["zskip"],
+                times,
+                seed=fabric.seed,
+            )
+        elapsed += time.perf_counter() - t0
+
+    return SweepResult(
+        points=list(points),
+        total_cycles=out["total_cycles"],
+        images_per_sec=out["images_per_sec"],
+        mean_utilization=out["mean_utilization"],
+        arrays_used=used,
+        arrays_total=total,
+        elapsed_s=elapsed,
+        engine="fused",
+        p50_cycles=pcts[:, 0] if fabric is not None else None,
+        p95_cycles=pcts[:, 1] if fabric is not None else None,
+        p99_cycles=pcts[:, 2] if fabric is not None else None,
+        fabric=fabric,
+    )
+
+
+# --------------------------------------------------- fused multi-chip sweep
+@dataclass
+class FusedChipSweepResult:
+    """Multi-chip outcome with a batched LOAD axis: row i of ``pcts`` holds
+    the (len(load_fracs), 3) p50/p95/p99 surface of ``points[i]`` —
+    placement x load evaluated in one batched virtual-time call per group."""
+
+    points: list[ChipSweepPoint]
+    load_fracs: tuple
+    images_per_sec: np.ndarray  # (C,)
+    pcts: np.ndarray  # (C, K, 3) latency percentiles, cycles
+    max_stage_transfer: np.ndarray
+    n_crossings: np.ndarray
+    arrays_used: np.ndarray
+    arrays_total: np.ndarray
+    elapsed_s: float
+
+    def __len__(self) -> int:
+        return len(self.points)
+
+    @property
+    def n_evaluations(self) -> int:
+        return len(self.points) * len(self.load_fracs)
+
+    def rows(self) -> list[dict]:
+        out = []
+        for i, p in enumerate(self.points):
+            for k, lf in enumerate(self.load_fracs):
+                out.append(
+                    {
+                        "network": p.network,
+                        "policy": p.policy,
+                        "n_chips": p.n_chips,
+                        "link_gbps": p.link_gbps,
+                        "load_frac": float(lf),
+                        "images_per_sec": float(self.images_per_sec[i]),
+                        "p50_ms": float(self.pcts[i, k, 0] / CLOCK_HZ * 1e3),
+                        "p95_ms": float(self.pcts[i, k, 1] / CLOCK_HZ * 1e3),
+                        "p99_ms": float(self.pcts[i, k, 2] / CLOCK_HZ * 1e3),
+                        "max_stage_transfer_cycles": float(
+                            self.max_stage_transfer[i]
+                        ),
+                        "n_crossings": int(self.n_crossings[i]),
+                        "arrays_used": int(self.arrays_used[i]),
+                        "arrays_total": int(self.arrays_total[i]),
+                    }
+                )
+        return out
+
+
+def run_fused_multichip_sweep(
+    points: list[ChipSweepPoint],
+    *,
+    load_fracs: tuple = (0.7,),
+    n_requests: int = 200,
+    closed_requests: int = 80,
+    concurrency: int = 32,
+    seed: int = 0,
+    profile_images: int = 1,
+    sample_patches: int = 128,
+    arrays_per_pe: int = ARRAYS_PER_PE,
+    latency_load_frac: float = 0.7,
+) -> FusedChipSweepResult:
+    """``run_multichip_sweep`` with the placement loop lifted into a
+    batchable placement x load axis.
+
+    The staged sweep evaluates one load point per run and walks placements
+    in Python; here every group's (unique placement) x (load_frac) cross
+    product goes through ONE batched open-loop virtual-time call (the
+    placements' per-stage transfer vectors packed by
+    ``topology.stage_transfer_matrix``), after one batched closed-loop call
+    for throughput.  At ``load_fracs=(0.7,)`` the outcome is element-wise
+    identical to ``run_multichip_sweep`` (pinned by the equivalence suite).
+    """
+    from ..fabric.arrivals import ClosedLoop, TraceReplay
+    from ..fabric.vtime import VirtualTimeFabric
+
+    K = len(load_fracs)
+    C = len(points)
+    ips = np.zeros(C)
+    pcts = np.zeros((C, K, 3))
+    xfer_max = np.zeros(C)
+    crossings = np.zeros(C, dtype=np.int64)
+    used = np.zeros(C, dtype=np.int64)
+    total = np.zeros(C, dtype=np.int64)
+
+    groups: dict[tuple, list[int]] = {}
+    for i, p in enumerate(points):
+        groups.setdefault((p.network, p.array), []).append(i)
+    prof_kw = dict(
+        profile_images=profile_images, sample_patches=sample_patches, seed=seed
+    )
+    for net, arr in groups:
+        get_profiled(net, arr, **prof_kw)
+
+    elapsed = 0.0
+    qs = (50.0, 95.0, 99.0)
+    for (net, arr), rows in groups.items():
+        spec, prof = get_profiled(net, arr, **prof_kw)
+        alias: dict[int, int] = {}
+        canon: dict[tuple, int] = {}
+        uniq: list[int] = []
+        for i in rows:
+            p = points[i]
+            key = (
+                p.policy, p.n_pes_total, p.n_chips,
+                p.link_gbps if p.n_chips > 1 else None,
+            )
+            if key not in canon:
+                canon[key] = i
+                uniq.append(i)
+            alias[i] = canon[key]
+        placed = []
+        for i in uniq:
+            p = points[i]
+            pa = allocate_placed(
+                spec, prof, p.policy, p.topology(arrays_per_pe),
+                load_frac=latency_load_frac,
+            )
+            placed.append(pa)
+            xfer_max[i] = pa.placement.max_stage_transfer
+            crossings[i] = pa.placement.n_crossings
+            used[i] = pa.allocation.arrays_used
+            total[i] = pa.allocation.arrays_total
+        allocs = [pa.allocation for pa in placed]
+        places = [pa.placement for pa in placed]
+        stage_transfer_matrix(places)  # validate the packable axis up front
+        t0 = time.perf_counter()
+        vt = VirtualTimeFabric(spec, prof, lane_quantum=8)
+        cl = vt.run_batch(
+            allocs, ClosedLoop(closed_requests, concurrency),
+            seed=seed, percentiles=qs, placements=places,
+        )
+        ips[uniq] = cl.images_per_sec
+        # the lifted axis: (placement x load) pairs share one normalized
+        # gap sequence and evaluate in ONE batched open-loop call
+        gaps = np.random.default_rng(seed).exponential(1.0, size=n_requests)
+        cum = np.cumsum(gaps)
+        U = len(uniq)
+        allocs_x = [allocs[u] for u in range(U) for _ in range(K)]
+        places_x = [places[u] for u in range(U) for _ in range(K)]
+        procs = [
+            TraceReplay(cum / (lf * ips[uniq[u]] / CLOCK_HZ))
+            for u in range(U)
+            for lf in load_fracs
+        ]
+        op = vt.run_batch(
+            allocs_x, procs, seed=seed, percentiles=qs, placements=places_x
+        )
+        lat = op.latencies.reshape(U, K, -1)
+        for k in range(K):
+            pcts[np.asarray(uniq), k] = np.percentile(lat[:, k], qs, axis=1).T
+        for i in rows:
+            j = alias[i]
+            if j != i:
+                ips[i] = ips[j]
+                pcts[i] = pcts[j]
+                xfer_max[i] = xfer_max[j]
+                crossings[i] = crossings[j]
+                used[i] = used[j]
+                total[i] = total[j]
+        elapsed += time.perf_counter() - t0
+
+    return FusedChipSweepResult(
+        points=list(points),
+        load_fracs=tuple(load_fracs),
+        images_per_sec=ips,
+        pcts=pcts,
+        max_stage_transfer=xfer_max,
+        n_crossings=crossings,
+        arrays_used=used,
+        arrays_total=total,
+        elapsed_s=elapsed,
+    )

@@ -26,7 +26,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-__all__ = ["bitplane_profile_kernel", "bitplane_block_profile", "bitplane_profile"]
+__all__ = [
+    "bitplane_profile_kernel",
+    "bitplane_block_profile",
+    "bitplane_profile",
+    "bitplane_cycle_bank",
+]
 
 
 def bitplane_profile_kernel(
@@ -83,6 +88,59 @@ def bitplane_block_profile(
         ),
         interpret=interpret,
     )(q_blocks)
+
+
+def bitplane_cycle_bank(
+    q_blocks: jax.Array,  # (..., S, r) uint8/int blocks, zero-padded rows
+    rows_per_read: tuple[int, ...],
+    *,
+    input_bits: int = 8,
+    cycles_per_read: int = 8,
+    use_pallas: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    """TRACEABLE multi-ADC zero-skip costing: one popcount, A re-costings.
+
+    The fused DSE pipeline's in-graph derivation step: counts '1' bits per
+    bit-plane ONCE (shift-and-mask, the same integers as ``np.unpackbits``
+    or the Pallas kernel) and re-costs them for every ADC precision in
+    ``rows_per_read`` — the whole ADC axis of a sweep from a single shared
+    capture, with no host round-trip.  Returns float64-able int32 cycles
+    shaped ``(A, ..., S)``; padded (all-zero) blocks cost the 1-read floor
+    per plane and must be masked by the caller, exactly like the profiler's
+    short last block.
+
+    ``use_pallas=True`` routes the popcount through ``bitplane_block_profile``
+    (TPU path; ``interpret=True`` off-TPU) — ones are bit-identical either
+    way, so the jnp path is the default inside large fused programs where a
+    grid launch per layer buys nothing on CPU.
+    """
+    if use_pallas:
+        if q_blocks.ndim != 3:
+            raise ValueError(f"pallas path needs (B, S, r), got {q_blocks.shape}")
+        ones, _ = bitplane_block_profile(
+            q_blocks.astype(jnp.int32),
+            input_bits=input_bits,
+            rows_per_read=int(rows_per_read[0]),
+            cycles_per_read=cycles_per_read,
+            interpret=interpret,
+        )
+        ones = jnp.moveaxis(ones, 1, -1)  # (B, S, planes)
+    else:
+        q = q_blocks.astype(jnp.int32)
+        ones = jnp.stack(
+            [
+                ((q >> (input_bits - 1 - p)) & 1).sum(axis=-1, dtype=jnp.int32)
+                for p in range(input_bits)
+            ],
+            axis=-1,
+        )  # (..., S, planes), plane 0 = MSB
+    banks = [
+        cycles_per_read
+        * jnp.maximum(1, (ones + rpr - 1) // rpr).sum(axis=-1, dtype=jnp.int32)
+        for rpr in rows_per_read
+    ]
+    return jnp.stack(banks, axis=0)  # (A, ..., S)
 
 
 def bitplane_profile(

@@ -51,13 +51,21 @@ class FaultInjector:
     """Deterministic failure schedule for tests: raises on listed steps
     (once each)."""
 
-    def __init__(self, fail_at: dict[int, int] | None = None, slow_at: dict[int, float] | None = None):
+    def __init__(
+        self,
+        fail_at: dict[int, int] | None = None,
+        slow_at: dict[int, float] | None = None,
+        sleep: Callable[[float], None] | None = None,
+    ):
         self.fail_budget = dict(fail_at or {})
         self.slow_at = dict(slow_at or {})
+        self._sleep = sleep
 
     def __call__(self, step: int) -> None:
         if self.slow_at.get(step):
-            time.sleep(self.slow_at[step])
+            # default late-bound so tests may monkeypatch time.sleep; a fake
+            # clock's `advance` can be injected instead for determinism
+            (self._sleep or time.sleep)(self.slow_at[step])
         if self.fail_budget.get(step, 0) > 0:
             self.fail_budget[step] -= 1
             raise RuntimeError(f"injected failure at step {step}")
@@ -73,6 +81,7 @@ class TrainRunner:
         fingerprint: str = "",
         on_straggler: Callable[[StepStats], None] | None = None,
         fault_hook: Callable[[int], None] | None = None,
+        clock: Callable[[], float] = time.monotonic,
     ):
         self.cfg = cfg
         self.step_fn = step_fn
@@ -80,9 +89,11 @@ class TrainRunner:
         self.fingerprint = fingerprint
         self.on_straggler = on_straggler
         self.fault_hook = fault_hook
+        self.clock = clock
         self.history: list[StepStats] = []
         self.restores = 0
         self._ewma: float | None = None
+        self._settled = 0  # steps already folded into the EWMA
 
     # ------------------------------------------------------------- lifecycle
     def _save(self, step, params, opt_state):
@@ -112,7 +123,7 @@ class TrainRunner:
         while step < n_steps:
             retries = 0
             while True:
-                t0 = time.monotonic()
+                t0 = self.clock()
                 try:
                     if self.fault_hook:
                         self.fault_hook(step)
@@ -132,15 +143,20 @@ class TrainRunner:
                     if tree is not None:
                         params, opt_state = tree["params"], tree["opt"]
                         step = restored_step
-            dt = time.monotonic() - t0
-            straggler = False
-            if self._ewma is not None and dt > self.cfg.straggler_factor * self._ewma:
-                straggler = True
+            dt = self.clock() - t0
+            # warm-up guard: the EWMA is meaningless until at least two steps
+            # have settled into it, so no straggler verdicts before then
+            straggler = (
+                self._settled >= 2
+                and self._ewma is not None
+                and dt > self.cfg.straggler_factor * self._ewma
+            )
             self._ewma = (
                 dt
                 if self._ewma is None
                 else (1 - self.cfg.ewma_alpha) * self._ewma + self.cfg.ewma_alpha * dt
             )
+            self._settled += 1
             stats = StepStats(step, dt, retries, straggler, metrics)
             self.history.append(stats)
             if straggler and self.on_straggler:

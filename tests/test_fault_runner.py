@@ -107,12 +107,55 @@ def test_checkpoint_cadence_and_resume_round_trip(tmp_path):
 
 
 # --------------------------------------------------------------- stragglers
+class _FakeClock:
+    """Deterministic monotonic clock: time only moves when advanced."""
+
+    def __init__(self, step_cost: float = 0.01):
+        self.now = 0.0
+        self.step_cost = step_cost
+
+    def __call__(self):
+        return self.now
+
+    def advance(self, dt: float):
+        self.now += dt
+
+    def batch_fn(self, step):
+        # every step "costs" a fixed wall time on the fake clock
+        self.advance(self.step_cost)
+        return _batch_fn(step)
+
+
 def test_straggler_detection_fires_callback(tmp_path):
-    inj = FaultInjector(slow_at={6: 0.05})
+    # fully deterministic: the runner reads the fake clock, and the injected
+    # stall advances it instead of sleeping — no wall-clock noise can flake
+    clk = _FakeClock(step_cost=0.01)
+    inj = FaultInjector(slow_at={6: 0.05}, sleep=clk.advance)
     seen = []
-    r = _runner(tmp_path, fault_hook=inj, on_straggler=seen.append)
+    cfg = RunnerConfig(ckpt_dir=str(tmp_path), ckpt_every=5, max_retries_per_step=3)
+    r = TrainRunner(
+        cfg, _step_fn, clk.batch_fn, fault_hook=inj, on_straggler=seen.append,
+        clock=clk,
+    )
     params, opt = _fresh()
     r.run(params, opt, 10)
     assert [s.step for s in seen] == [6]
     assert seen[0].straggler and seen[0].seconds >= 0.05
     assert len(r.history) == 10
+
+
+def test_straggler_warmup_suppresses_early_verdicts(tmp_path):
+    # a stall inside the EWMA warm-up window (< 2 settled steps) must not
+    # fire the callback, however large
+    clk = _FakeClock(step_cost=0.01)
+    inj = FaultInjector(slow_at={1: 10.0}, sleep=clk.advance)
+    seen = []
+    cfg = RunnerConfig(ckpt_dir=str(tmp_path), ckpt_every=5, max_retries_per_step=3)
+    r = TrainRunner(
+        cfg, _step_fn, clk.batch_fn, fault_hook=inj, on_straggler=seen.append,
+        clock=clk,
+    )
+    params, opt = _fresh()
+    r.run(params, opt, 6)
+    assert seen == []
+    assert not any(s.straggler for s in r.history)
