@@ -20,9 +20,16 @@ only the speedup ratios (self-normalizing); pass ``--strict-timing`` to
 also enforce the raw ``us_per_call`` timings.
 
 Some headline metrics are REQUIRED (``_REQUIRED``): the fused-DSE bench
-must always report its ``end_to_end_speedup`` ratio — a fused bench that
-silently stops reporting the acceptance number is a broken guard, so its
-absence is a hard error (exit 2), not a skipped comparison.
+must always report its ``end_to_end_speedup`` AND ``analytic_speedup``
+ratios — a fused bench that silently stops reporting an acceptance number
+is a broken guard, so absence is a hard error (exit 2), not a skipped
+comparison.
+
+Rows may carry a ``configs=<n>`` field in their derived string recording
+the grid size the speedups were measured at.  When baseline and fresh
+disagree on a row's config count, that row's ratio comparisons are not
+like-for-like (speedups are density-dependent), so they are skipped with
+a WARN instead of failing or silently passing.
 
   PYTHONPATH=src python benchmarks/check_drift.py             # vs HEAD
   python benchmarks/check_drift.py --base HEAD~1 --tolerance 0.15
@@ -41,9 +48,13 @@ REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 # metric keys may contain '@' and '.' (retention8chip@64gbps=1.00x); value
 # must end in 'x' so latency/ms fields never match
 _SPEEDUP = re.compile(r"([\w.@]+)=([0-9.]+)x")
+# grid size stamp: speedup ratios are only comparable at equal grid sizes
+_CONFIGS = re.compile(r"\bconfigs=(\d+)\b")
 # headline keys that must exist whenever the file is checked; the file
 # itself is mandatory in default-glob (nightly) runs
-_REQUIRED = {"BENCH_dse_fused.json": ("end_to_end_speedup",)}
+_REQUIRED = {
+    "BENCH_dse_fused.json": ("end_to_end_speedup", "analytic_speedup")
+}
 
 
 def _baseline(ref: str, name: str) -> dict | None:
@@ -64,17 +75,30 @@ def _baseline(ref: str, name: str) -> dict | None:
         raise SystemExit(2)
 
 
-def _metrics(doc: dict, timing: bool) -> dict[str, tuple[float, bool]]:
-    """{metric name: (value, higher_is_better)} for one bench document."""
+def _metrics(
+    doc: dict, timing: bool
+) -> tuple[dict[str, tuple[float, bool]], dict[str, int]]:
+    """({metric: (value, higher_is_better)}, {metric: configs=}) for one
+    bench document.  The second map carries each metric's row-level
+    ``configs=<n>`` grid-size stamp (absent when the row has none)."""
     out: dict[str, tuple[float, bool]] = {}
+    sizes: dict[str, int] = {}
     for row in doc.get("rows", []):
         name = row.get("name", "?")
+        derived = str(row.get("derived", ""))
+        cfg = _CONFIGS.search(derived)
+        keys = []
         if timing and row.get("us_per_call", 0) > 0:
+            keys.append("us_per_call")
             out[f"{name}.us_per_call"] = (float(row["us_per_call"]), False)
-        for key, val in _SPEEDUP.findall(str(row.get("derived", ""))):
+        for key, val in _SPEEDUP.findall(derived):
             if "speedup" in key or "retention" in key:
+                keys.append(key)
                 out[f"{name}.{key}"] = (float(val), True)
-    return out
+        if cfg:
+            for key in keys:
+                sizes[f"{name}.{key}"] = int(cfg.group(1))
+    return out, sizes
 
 
 def main(argv=None) -> int:
@@ -127,7 +151,7 @@ def main(argv=None) -> int:
         except (OSError, json.JSONDecodeError) as e:
             print(f"error: cannot read {path.name}: {e}", file=sys.stderr)
             return 2
-        fresh = _metrics(cur, args.strict_timing)
+        fresh, fresh_sizes = _metrics(cur, args.strict_timing)
         for req in _REQUIRED.get(path.name, ()):
             if not any(k.endswith(f".{req}") for k in fresh):
                 print(
@@ -141,7 +165,7 @@ def main(argv=None) -> int:
             print(f"{path.name}: no baseline at {args.base}, skipping")
             continue
         cm = fresh
-        bm = _metrics(base, args.strict_timing)
+        bm, base_sizes = _metrics(base, args.strict_timing)
         # a baseline key absent from the fresh run (renamed bench row,
         # changed grid size in the name) silently disables its guard — say
         # so loudly in the nightly log rather than skipping in silence
@@ -149,6 +173,19 @@ def main(argv=None) -> int:
             print(f"WARN {path.name}:{key} in baseline but not in fresh run")
         for key, (bv, hib) in bm.items():
             if key not in cm or bv <= 0:
+                continue
+            if (
+                key in base_sizes
+                and key in fresh_sizes
+                and base_sizes[key] != fresh_sizes[key]
+            ):
+                # speedup ratios are density-dependent: a resized grid is
+                # not like-for-like, so skip loudly instead of judging it
+                print(
+                    f"WARN {path.name}:{key} config count changed "
+                    f"({base_sizes[key]} -> {fresh_sizes[key]}); "
+                    f"skipping comparison"
+                )
                 continue
             cv = cm[key][0]
             checked += 1

@@ -747,19 +747,26 @@ def fabric_multichip():
 
 
 def dse_fused():
-    """The one-jit fused DSE pipeline (derive -> allocate -> eval in-graph,
-    family-partitioned programs spanning every ADC variant) vs the staged
-    path (host profile derive per (geometry, ADC) + allocate_batch +
-    BatchSimulator per group), plus the lifted placement x load axis vs
-    running the staged multichip sweep once per load.  Both paths share one
-    warm activation capture; each analytic pass is timed on its second
-    (compile-warm) invocation, with the staged pass re-paying the host
-    profile derivation every run (that derivation is part of what the
-    fusion moved in-graph).  Acceptance: every integer-cycle analytic
-    column bit-equal (utilization at ULP tolerance),
-    the 0.7-load chip column bit-equal, and the committed headline
-    ``end_to_end_speedup`` present (benchmarks/check_drift.py errors out
-    if it ever goes missing)."""
+    """The one-jit fused DSE pipeline (shared per-ADC bank stacks, event-
+    schedule allocation replay, chunk-streamed scatter+eval dispatches) vs
+    the staged path (host profile derive per (geometry, ADC) +
+    allocate_batch + BatchSimulator per group), plus the lifted
+    placement x load axis vs running the staged multichip sweep once per
+    load.  The headline grid is 10^6 analytic configs streamed through the
+    chunked driver; a density sub-table re-times the VGG11 analytic grid at
+    several budgets-per-variant densities (the regime axis where the
+    pre-shared-bank fused path used to LOSE — 0.69x at 6,400 pv).  Both
+    paths share one warm activation capture; each analytic pass is timed on
+    its second (compile-warm) invocation, with the staged pass re-paying
+    the host profile derivation every run (that derivation is part of what
+    the fusion moved in-graph).  Per-stage wall times and peak RSS land in
+    the BENCH json as telemetry gauges.  Acceptance: every integer-cycle
+    analytic column bit-equal (utilization at ULP tolerance), the 0.7-load
+    chip column bit-equal, and the committed headlines
+    ``end_to_end_speedup`` AND ``analytic_speedup`` present
+    (benchmarks/check_drift.py errors out if either goes missing)."""
+    import resource
+
     from repro.core.cim import DEFAULT_ARRAY
     from repro.dse import (
         chip_grid,
@@ -769,6 +776,7 @@ def dse_fused():
         run_sweep,
     )
     from repro.dse.sweep import _PROFILE_CACHE, get_captured, run_multichip_sweep
+    from repro.fabric.telemetry import get_telemetry
 
     arrays = tuple(
         DEFAULT_ARRAY.variant(rows=r, cols=r, adc_bits=a)
@@ -776,23 +784,30 @@ def dse_fused():
         for a in (1, 2, 3, 4, 5, 6, 7, 8)
     )
     pols = ("baseline", "weight_based", "perf_layerwise", "blockwise")
-    pts = design_grid(
-        networks=("vgg11",), policies=pols,
-        pe_multipliers=tuple(np.linspace(1.0, 6.0, 1200)), arrays=arrays,
-    ) + design_grid(
+
+    def vgg_grid(n_budgets):
+        return design_grid(
+            networks=("vgg11",), policies=pols,
+            pe_multipliers=tuple(np.linspace(1.0, 6.0, n_budgets)),
+            arrays=arrays,
+        )
+
+    # 64 (geometry, ADC, policy) variants x 11,250 + 4,400 budgets = the
+    # 10^6-config headline grid the chunked fused driver streams through
+    pts = vgg_grid(11250) + design_grid(
         networks=("resnet18",), policies=pols,
-        pe_multipliers=tuple(np.linspace(1.0, 2.5, 400)), arrays=arrays,
+        pe_multipliers=tuple(np.linspace(1.0, 2.5, 4400)), arrays=arrays,
     )
     for net in ("vgg11", "resnet18"):
         get_captured(net)  # shared capture, warmed outside both timings
 
-    def staged_pass():
+    def staged_pass(p):
         _PROFILE_CACHE.clear()  # staged honestly re-pays per-variant derive
-        return run_sweep(pts, engine="batch")
+        return run_sweep(p, engine="batch")
 
-    staged_pass()  # warm compiles (BatchSimulator per geometry)
+    staged_pass(pts)  # warm compiles (BatchSimulator per geometry)
     t0 = time.perf_counter()
-    staged = staged_pass()
+    staged = staged_pass(pts)
     t_staged = time.perf_counter() - t0
 
     t0 = time.perf_counter()
@@ -810,6 +825,27 @@ def dse_fused():
         for c in ("total_cycles", "images_per_sec", "mean_utilization")
     )
     assert equiv, "fused sweep diverged from the staged path"
+    del staged, fused  # the 10^6-row columns: release before the density runs
+
+    # density-vs-speedup table: same VGG11 variant set, budgets-per-variant
+    # swept across the regimes EXPERIMENTS.md discusses (80 pv is the
+    # variant-dense regime, 6,400 pv the config-dense one that measured
+    # 0.69x before the shared-bank + event-schedule rework)
+    density_keys = []
+    for pv in (80, 400, 1200, 6400):
+        dpts = vgg_grid(pv)
+        staged_pass(dpts)  # warm this C's program shapes
+        run_fused_sweep(dpts)
+        t0 = time.perf_counter()
+        staged_pass(dpts)
+        ts = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        run_fused_sweep(dpts)
+        tf = time.perf_counter() - t0
+        density_keys.append(f"analytic_speedup_{pv}pv={ts / tf:.2f}x")
+        _detail(
+            "dse_fused", "density", pv, len(dpts), f"{ts:.3f}", f"{tf:.3f}"
+        )
 
     # placement x load surface: staged = one full multichip sweep PER load
     # (closed-loop re-measured and kernels re-built each time); fused = one
@@ -837,15 +873,33 @@ def dse_fused():
 
     n_cfg = len(pts) + fused_chip.n_evaluations
     e2e = (t_staged + t_chip_staged) / (t_fused + t_chip_fused)
+    # stable row name + a configs= field: check_drift compares speedups
+    # like-for-like and skips (with a WARN) when the grid size changes
     _row(
-        f"dse_fused_{n_cfg}cfg",
+        "dse_fused",
         t_fused * 1e6,
-        f"end_to_end_speedup={e2e:.2f}x;analytic_ratio={t_staged / t_fused:.2f}x;"
+        f"end_to_end_speedup={e2e:.2f}x;"
+        f"analytic_speedup={t_staged / t_fused:.2f}x;"
         f"load_surface_ratio={t_chip_staged / t_chip_fused:.2f}x;"
         f"staged_s={t_staged + t_chip_staged:.2f};"
         f"fused_s={t_fused + t_chip_fused:.2f};"
         f"fused_cold_s={t_fused_cold:.2f};configs={n_cfg};"
         f"equiv={equiv and chip_equiv}",
+    )
+    # the density keys are self-labeled (fixed pv each), so they live on a
+    # configs=-free row and stay drift-comparable across headline resizes
+    _row("dse_fused_density", 0.0, ";".join(density_keys))
+    # per-stage wall time + peak RSS ride the telemetry session into the
+    # BENCH json (nightly uploads it with the artifact)
+    tel = get_telemetry()
+    tel.gauge("dse.fused.bench.analytic_staged_s", round(t_staged, 3))
+    tel.gauge("dse.fused.bench.analytic_fused_s", round(t_fused, 3))
+    tel.gauge("dse.fused.bench.analytic_fused_cold_s", round(t_fused_cold, 3))
+    tel.gauge("dse.fused.bench.chip_staged_s", round(t_chip_staged, 3))
+    tel.gauge("dse.fused.bench.chip_fused_s", round(t_chip_fused, 3))
+    tel.gauge(
+        "dse.fused.bench.peak_rss_mb",
+        round(resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0, 1),
     )
     _detail("dse_fused", "analytic_configs", len(pts), f"{t_staged:.2f}", f"{t_fused:.2f}")
     _detail(
@@ -1027,9 +1081,10 @@ def main() -> None:
                 "rows": _JSON_ROWS[r0:],
                 "details": _JSON_DETAILS[d0:],
             }
-            if snap["counters"] or snap["histograms"]:
+            if snap["counters"] or snap["gauges"] or snap["histograms"]:
                 payload["telemetry"] = {
                     "counters": snap["counters"],
+                    "gauges": snap["gauges"],
                     "histograms": snap["histograms"],
                 }
             write_bench_json(n, payload)

@@ -376,7 +376,7 @@ def _pack_profile(spec: NetworkSpec, prof: NetworkProfile) -> SimTensors:
 
 def _eval_kernel(
     xp,
-    mean_b,  # (L, B) — zskip variant already selected
+    mean_b,  # (L, B) — zskip variant already selected; (V, L, B) with ``sel``
     max_b,  # (L, B)
     pm_mean,  # (L,)
     pm_max,  # (L,)
@@ -389,12 +389,30 @@ def _eval_kernel(
     layerwise,  # scalar bool: barrier (layer-wise) vs independent blocks
     n_images,
     clock_hz,
+    *,
+    sel=None,  # scalar variant index into a leading stack axis, or None
 ):
     """One allocation -> (T, img/s, per-layer makespan, per-layer util).
 
     Pure array algebra: runs identically with ``xp=numpy`` (scalar float64
     path) and ``xp=jax.numpy`` (vmapped batch path).
+
+    With ``sel`` the five statistic tensors carry a leading variant axis
+    (e.g. the fused pipeline's (2A, L, B) baseline+zskip per-ADC stacks)
+    and the kernel gathers its variant FIRST, inside the kernel body.
+    Under ``vmap`` (banks unbatched, ``sel`` batched) this is a per-config
+    scalar-indexed gather that XLA fuses into the eval loop — the bank
+    stack stays shared across the whole batch instead of being
+    materialized per config (the 0.69x dense-grid regression the shared
+    bank layout removes).  Selecting an element is not arithmetic, so
+    results are identical to pre-gathered inputs.
     """
+    if sel is not None:
+        mean_b = mean_b[sel]
+        max_b = max_b[sel]
+        pm_mean = pm_mean[sel]
+        pm_max = pm_max[sel]
+        busy_sum = busy_sum[sel]
     P = ppi * n_images  # (L,) patches in the batch
     d_layer = dups_lb[:, 0]
     # layer-wise: patches synchronize on the slowest block (barrier)

@@ -32,10 +32,46 @@ from ..core.cim.simulate import (
     blockwise_units,
 )
 
-__all__ = ["AllocationBatch", "allocate_batch", "run_batch", "to_allocation"]
+__all__ = [
+    "AllocationBatch",
+    "allocate_batch",
+    "flat_unit_map",
+    "run_batch",
+    "to_allocation",
+]
 
 _PROPORTIONAL = ("baseline", "weight_based", "weight_blockflow")
 _LAYERWISE_FLOW = ("baseline", "weight_based", "perf_layerwise")
+
+
+def flat_unit_map(
+    L: int,
+    B: int,
+    l_idx: np.ndarray | None = None,
+    blk_idx: np.ndarray | None = None,
+) -> np.ndarray:
+    """One-hot (N, L, B) map from a flat allocation-unit axis to the dense
+    replica tensor — the shared representation of BOTH greedy families.
+
+    ``l_idx is None`` builds the per-LAYER family (perf_layerwise and the
+    proportional policies): N = L units, each broadcasting its replicas
+    across every block column of its layer.  With ``l_idx``/``blk_idx``
+    (from ``NetworkSpec.block_table``) it builds the per-BLOCK family
+    (blockwise): each unit owns exactly its (layer, block) cell.  Replica
+    scatters become the exact matmul ``dups = 1 + (r - 1) @ map`` (one
+    nonzero * 1.0 per cell), which is how the Pallas fused allocate+eval
+    kernel (``kernels.fused_alloc_eval``) keeps both families in one
+    kernel body.
+    """
+    if l_idx is None:
+        u = np.zeros((L, L, B))
+        u[np.arange(L), np.arange(L), :] = 1.0
+        return u
+    l_idx = np.asarray(l_idx, dtype=np.int64)
+    blk_idx = np.asarray(blk_idx, dtype=np.int64)
+    u = np.zeros((l_idx.size, L, B))
+    u[np.arange(l_idx.size), l_idx, blk_idx] = 1.0
+    return u
 
 
 @dataclass(frozen=True)

@@ -4,18 +4,24 @@ The staged sweep (``run_sweep``) dispatches three separately-jitted stages
 per (network, array) group — host-side ``derive_profile`` views per ADC
 variant, the lock-step batched allocators, and the vmapped throughput
 kernel — with host round-trips (and profile-cache traffic) between every
-pair.  This module fuses them: ONE traced program per (network,
-rows-geometry) group derives the per-ADC bit-plane cycle banks from the
-shared ``capture_activations`` capture *inside the graph*
+pair.  This module collapses them around ONE derive per (network,
+rows-geometry) group: the per-ADC bit-plane cycle banks come from the
+shared ``capture_activations`` capture *in-graph*
 (``kernels.bitplane_profile.bitplane_cycle_bank``: shift-and-mask popcount
-+ multi-ADC zero-skip re-costing), runs the traceable batched greedy
-(``core.alloc.greedy.greedy_batch_kernel``), and feeds the vmapped
-``_eval_kernel`` — so a whole (ADC x policy x PE-budget) config tensor
-evaluates with no host round-trips between the stages.  Configs partition
-by ALLOCATION FAMILY (proportional / layer-greedy / block-greedy, a static
-``kind`` per compiled program) so the serial lock-step greedy only runs
-over the configs that need it — the same partitions the staged
-``allocate_batch`` forms, but fused end-to-end and spanning every ADC
++ multi-ADC zero-skip re-costing), stacked once and kept device-resident
+across every chunk of every call.  Allocation exploits the same sharing:
+each greedy family's base latencies are per-ADC-variant constants, so the
+whole lock-step greedy is replayed from ONE sorted grant-event table per
+variant (``core.alloc.greedy.greedy_event_schedule`` — exact, heap-order
+tie-for-tie) at a ``searchsorted`` per config, instead of a bisection +
+residual ``while_loop`` over (C, N) tensors per dispatch.  The per-chunk
+traced program is then pure scatter + vmapped ``_eval_kernel``, with each
+config gathering its variant's banks by one scalar ``sel`` INSIDE the
+kernel — so nothing (C, L, B)-shaped exists besides the replica tensor
+and a whole (ADC x policy x PE-budget) config tensor streams through with
+no host round-trips between the stages.  Configs partition by replica
+FAMILY (per-layer vectors: proportional + perf_layerwise; per-block-unit
+vectors: blockwise) — one compiled program per family, spanning every ADC
 variant per dispatch instead of one dispatch per (geometry, ADC, family).
 
 Equivalence contract (pinned by tests/test_fused_dse.py): every DISCRETE
@@ -69,7 +75,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from ..core.alloc.greedy import greedy_batch_kernel, proportional_allocate_batch
+from ..core.alloc.greedy import greedy_event_schedule, proportional_allocate_batch
 from ..core.cim.cost import ArrayConfig, DEFAULT_ARRAY, baseline_cycles
 from ..core.cim.network import NetworkSpec
 from ..core.cim.profile import ActivationCapture
@@ -225,39 +231,40 @@ class FusedPipeline:
         self.pm_max0 = np.where(s_mask, pmax0, -np.inf).max(axis=2)
         self.busy0 = np.where(b_mask[None], self.mean0, 0.0).sum(axis=2)
 
-    # --------------------------------------------------------- traced program
-    def _fn(self, kind: int, n_images: int, clock_hz: float, return_bank: bool):
-        key = (kind, n_images, clock_hz, return_bank)
-        if key in self._compiled:
-            return self._compiled[key]
-        import functools
+    # --------------------------------------------- stage 1: shared bank stacks
+    def _stats(self, return_bank: bool = False):
+        """Per-group SHARED statistic stacks, derived in-graph ONCE and kept
+        device-resident across every chunk of every call.
 
+        Returns ``(mean_s, max_s (2A, L, B), pmn_s, pmx_s, busy_s (2A, L),
+        exp_lat (A, L), base_blk (A, N))``: the baseline (zskip OFF)
+        variants occupy stack slots [0, A) and the zero-skip derivations
+        slots [A, 2A), so a per-config scalar ``sel = a_idx + A*zskip``
+        picks a variant *inside* ``_eval_kernel`` — no per-config (L, B)
+        bank is ever materialized.  Derivation (popcount + multi-ADC
+        re-costing + reductions) is bit-equal to the staged
+        ``_pack_profile`` statistics: integer-valued sums are exact in any
+        order and each division happens once."""
+        key = bool(return_bank)
+        cached = getattr(self, "_stats_cache", {})
+        if key in cached:
+            return cached[key]
         import jax
         import jax.numpy as jnp
+        from jax.experimental import enable_x64
 
         from ..kernels.bitplane_profile import bitplane_cycle_bank
 
-        if return_bank and self.shard:
-            raise ValueError(
-                "return_bank is unavailable on the sharded pipeline (the "
-                "bank's leading axis is the ADC variant, not the config "
-                "batch) — use bank() or an unsharded pipeline"
-            )
         rows_per_read = tuple(v.rows_per_read for v in self.variants)
         cpr = self.base_array.cycles_per_read
-        Q, s_mask, b_mask = self.Q, self.s_mask, self.b_mask
-        s_count, ppi = self.s_count, self.ppi
-        width, layer_arrays = self.width, self.layer_arrays
-        l_idx, blk_idx, cost_blk = self.l_idx, self.blk_idx, self.cost_blk
-        mean0, max0 = self.mean0, self.max0
-        pm_mean0, pm_max0, busy0 = self.pm_mean0, self.pm_max0, self.busy0
-        base_arrays, L, B, N = self.base_arrays, self.L, self.B, self.N
+        s_mask, b_mask, s_count, ppi = (
+            self.s_mask, self.b_mask, self.s_count, self.ppi,
+        )
+        l_idx, blk_idx = self.l_idx, self.blk_idx
 
-        def fused(Q, budgets, a_idx, zskip, layerwise, dups0):
-            C = budgets.shape[0]
-            # ---- stage 1: in-graph per-ADC profile derivation -----------
+        def derive(Q):
             bank = bitplane_cycle_bank(
-                jnp.asarray(Q), rows_per_read, cycles_per_read=cpr
+                Q, rows_per_read, cycles_per_read=cpr
             )  # (A, L, B, S) int32
             valid = s_mask[None, :, None, :] & b_mask[None, :, :, None]
             cyc = jnp.where(valid, bank, 0).astype(jnp.float64)
@@ -270,46 +277,81 @@ class FusedPipeline:
             )
             pm_max1 = jnp.where(s_mask, pmax1, -jnp.inf).max(axis=2)
             busy1 = jnp.where(b_mask[None], mean_b1, 0.0).sum(axis=2)
+            # baseline stacked under zskip: slot v, slot A+v per ADC index v
+            stats = (
+                jnp.concatenate([jnp.asarray(self.mean0), mean_b1]),
+                jnp.concatenate([jnp.asarray(self.max0), max_b1]),
+                jnp.concatenate([jnp.asarray(self.pm_mean0), pm_mean1]),
+                jnp.concatenate([jnp.asarray(self.pm_max0), pm_max1]),
+                jnp.concatenate([jnp.asarray(self.busy0), busy1]),
+                pm_mean1 * ppi[None, :],  # per-ADC perf_layerwise bases
+                (mean_b1 * ppi[None, :, None])[:, l_idx, blk_idx],  # blockwise
+            )
+            return stats + (cyc,) if return_bank else stats
 
-            # ---- stage 2: in-graph allocation ---------------------------
-            # `kind` is STATIC: each allocation family gets its own program,
-            # so the serial lock-step greedy only ever runs over configs
-            # that need it — mirroring the staged per-policy partitions
-            # instead of paying every allocator for every config
-            if kind == 1:  # perf_layerwise: greedy on expected layer latency
-                exp_lat = pm_mean1 * ppi[None, :]  # (A, L)
-                r_perf, _ = greedy_batch_kernel(
-                    exp_lat[a_idx],
-                    jnp.broadcast_to(jnp.asarray(layer_arrays), (C, L)),
-                    budgets,
-                    jnp.ones((C, L)),
-                )
-                dups_lb = jnp.broadcast_to(r_perf[:, :, None], (C, L, B))
-                used_f = (r_perf - 1.0) @ layer_arrays
-            elif kind == 2:  # blockwise: greedy on flat per-block units
-                base_blk = (mean_b1 * ppi[None, :, None])[:, l_idx, blk_idx]
-                r_blk, _ = greedy_batch_kernel(
-                    base_blk[a_idx],  # (C, N)
-                    jnp.broadcast_to(jnp.asarray(cost_blk), (C, N)),
-                    budgets,
-                    jnp.ones((C, N)),
-                )
-                dups_lb = jnp.ones((C, L, B)).at[:, l_idx, blk_idx].set(r_blk)
-                used_f = ((r_blk - 1.0) * cost_blk).sum(axis=1)
-            else:  # proportional: replicas are host-precomputed constants
-                dups_lb = jnp.broadcast_to(dups0[:, :, None], (C, L, B))
-                used_f = (dups0 - 1.0) @ layer_arrays
-            used = base_arrays + used_f.astype(jnp.int64)
+        with enable_x64():
+            out = jax.jit(derive)(jnp.asarray(self.Q))
+        cached[key] = out
+        self._stats_cache = cached
+        return out
 
-            # ---- stage 3: vmapped throughput/utilization kernel ---------
-            zc = zskip[:, None, None]
-            mean_c = jnp.where(zc, mean_b1[a_idx], jnp.asarray(mean0)[a_idx])
-            max_c = jnp.where(zc, max_b1[a_idx], jnp.asarray(max0)[a_idx])
-            zl = zskip[:, None]
-            pmn_c = jnp.where(zl, pm_mean1[a_idx], jnp.asarray(pm_mean0)[a_idx])
-            pmx_c = jnp.where(zl, pm_max1[a_idx], jnp.asarray(pm_max0)[a_idx])
-            busy_c = jnp.where(zl, busy1[a_idx], jnp.asarray(busy0)[a_idx])
+    # ------------------------------------------- stage 2: schedule lookups
+    def _schedule(self, kind: int, a: int, max_budget: float):
+        """Cached ``GreedyEventSchedule`` for one (family, ADC variant).
 
+        The greedy families' base latencies are per-variant constants
+        (derived once by ``_stats``), so the entire lock-step greedy
+        collapses into ONE sorted grant-event table per variant that
+        answers every PE budget with a ``searchsorted`` — exactly (the
+        schedule replays the heap order, tie-for-tie; see
+        ``core.alloc.greedy.GreedyEventSchedule``).  Rebuilt only when a
+        call's budget range outgrows the cached coverage."""
+        cache = getattr(self, "_sched_cache", None)
+        if cache is None:
+            cache = self._sched_cache = {}
+        sched = cache.get((kind, a))
+        if sched is not None and sched.max_budget >= max_budget:
+            return sched
+        stats = self._stats()
+        if kind == 1:
+            base = np.asarray(stats[5])[a]  # (L,) expected layer latency
+            cost = self.layer_arrays
+        else:
+            base = np.asarray(stats[6])[a]  # (N,) per-block-unit latency
+            cost = self.cost_blk
+        sched = greedy_event_schedule(base, cost, max_budget)
+        cache[(kind, a)] = sched
+        return sched
+
+    # --------------------------------------------------------- traced program
+    def _fn(self, fam: str, n_images: int, clock_hz: float):
+        """Per-chunk program for one replica FAMILY: ``"L"`` (per-layer
+        replica vectors — the proportional and perf_layerwise kinds) or
+        ``"B"`` (per-block-unit vectors — blockwise).  With allocation
+        answered by the shared event schedules, the traced program is pure
+        scatter + vmapped eval; the bank stacks ride in as unbatched
+        closures and each config gathers its variant by one scalar ``sel``
+        inside ``_eval_kernel``."""
+        key = (fam, n_images, clock_hz)
+        if key in self._compiled:
+            return self._compiled[key]
+        import functools
+
+        import jax
+        import jax.numpy as jnp
+
+        b_mask, ppi = self.b_mask, self.ppi
+        width, layer_arrays = self.width, self.layer_arrays
+        l_idx, blk_idx = self.l_idx, self.blk_idx
+        L, B = self.L, self.B
+
+        def fused(stats, sel, layerwise, r):
+            mean_s, max_s, pmn_s, pmx_s, busy_s = stats
+            C = sel.shape[0]
+            if fam == "B":
+                dups_lb = jnp.ones((C, L, B)).at[:, l_idx, blk_idx].set(r)
+            else:
+                dups_lb = jnp.broadcast_to(r[:, :, None], (C, L, B))
             eval_one = functools.partial(
                 _eval_kernel,
                 jnp,
@@ -321,30 +363,31 @@ class FusedPipeline:
                 clock_hz=clock_hz,
             )
             T, ips, layer_T, util = jax.vmap(
-                lambda m, x, pn, px, bs, d, lw: eval_one(
-                    m, x, pn, px, bs, dups_lb=d, layerwise=lw
+                lambda s, d, lw: eval_one(
+                    mean_s, max_s, pmn_s, pmx_s, busy_s,
+                    dups_lb=d, layerwise=lw, sel=s,
                 )
-            )(mean_c, max_c, pmn_c, pmx_c, busy_c, dups_lb, layerwise)
-            out = (T, ips, layer_T, util, dups_lb, used)
-            if return_bank:
-                out = out + (cyc,)
-            return out
+            )(sel, dups_lb, layerwise)
+            return T, ips, layer_T, util, dups_lb
 
+        stats = self._stats()[:5]
         if self.shard:
             # shard_map_batch splits every positional arg along the config
-            # axis, so Q rides along as a closed-over replicated constant
-            # (XLA folds the popcount once per compilation)
+            # axis, so the bank stacks ride along as closed-over replicated
+            # constants
             from ..distrib.sharding import shard_map_batch
 
             self._compiled[key] = shard_map_batch(
-                functools.partial(fused, Q)
+                functools.partial(fused, stats)
             )
         else:
-            # unsharded: Q enters as a runtime operand — the popcount runs
-            # in-graph instead of being constant-folded at compile time
-            jitted = jax.jit(fused)
-            Qd = jnp.asarray(Q)
-            self._compiled[key] = lambda *a, _j=jitted, _q=Qd: _j(_q, *a)
+            # donate the (C, L) replica operand where an output of the same
+            # shape exists (layer_T / util): the chunked driver streams
+            # fresh chunks through one program, so XLA reuses the buffer
+            # instead of growing the live set per dispatch
+            donate = (3,) if fam == "L" else ()
+            jitted = jax.jit(fused, donate_argnums=donate)
+            self._compiled[key] = lambda *a, _j=jitted, _s=stats: _j(_s, *a)
         return self._compiled[key]
 
     def _validate(self, policies, n_pes):
@@ -376,6 +419,8 @@ class FusedPipeline:
         clock_hz: float = CLOCK_HZ,
         chunk: int = 32768,
         return_bank: bool = False,
+        need_dups: bool = True,
+        engine: str = "xla",
     ):
         """Evaluate C packed configs in one fused dispatch per chunk.
 
@@ -384,8 +429,27 @@ class FusedPipeline:
         arrays_used, arrays_total) plus ``bank`` (A, L, S, B) float64 when
         ``return_bank`` — element-wise identical to the staged
         ``allocate_batch`` + ``BatchSimulator`` outputs.
+
+        ``chunk`` tiles the config axis: each tile is one fused dispatch,
+        so peak memory is bounded by the tile, not by C — the knob that
+        lets a 10^6-config sweep stream through a fixed device footprint.
+        ``need_dups=False`` drops the (C, L, B) replica tensor from the
+        host outputs (the analytic columns never read it back): at 10^6
+        configs that single column is gigabytes, and skipping its
+        device->host fetch is what keeps the host side flat too.
+
+        ``engine="pallas"`` routes every config through the fused
+        allocate+eval Pallas kernel (``kernels.fused_alloc_eval``): the
+        greedy runs IN-kernel against the per-variant bases (proportional
+        configs ride along at budget 0 with their replicas as warm start)
+        — the dense-grid TPU regime, interpret-mode fallback off-TPU.
+        Results are element-wise identical on the discrete columns and
+        within the rtol 1e-12 contract on floats (pinned by
+        tests/test_fused_dse.py).
         """
         from jax.experimental import enable_x64
+
+        from ..fabric.telemetry import get_telemetry
 
         policies, n_pes, total = self._validate(policies, n_pes)
         a_idx = np.broadcast_to(
@@ -400,33 +464,67 @@ class FusedPipeline:
         kind = np.array([_KIND[p] for p in policies], dtype=np.int32)
         zskip = policies != "baseline"
         layerwise = np.isin(policies, _LAYERWISE_FLOW)
-        # proportional replicas are MACs-only config constants: precompute
-        # host-side with the staged routine (exact; and numpy argsort
-        # tie-order never has to match XLA's inside the graph)
-        dups0 = np.ones((C, self.L))
+        A = len(self.variants)
+        sel = (a_idx + np.where(zskip, A, 0)).astype(np.int32)
+
+        # ---- stage 2, host side: every replica vector from shared tables.
+        # Proportional replicas are MACs-only config constants (the staged
+        # largest-remainder routine, exact); the greedy families replay the
+        # per-variant event schedules — element-wise identical to the
+        # lock-step kernel, at a searchsorted per config instead of a
+        # bisection + residual loop over (C, N) tensors per chunk.
+        r_layer = np.ones((C, self.L))  # rows of family "L" only
         prop = kind == 0
         if prop.any():
             res = proportional_allocate_batch(
                 self.macs, self.layer_arrays, budgets[prop]
             )
-            dups0[prop] = res.replicas.astype(np.float64)
+            r_layer[prop] = res.replicas.astype(np.float64)
+        if engine == "pallas":
+            return self._pallas_eval(
+                sel, a_idx, kind, budgets, layerwise, zskip, r_layer, total,
+                int(n_images), float(clock_hz), int(chunk), need_dups,
+                return_bank,
+            )
+        if engine != "xla":
+            raise ValueError(f"unknown engine {engine!r}; use 'xla' or 'pallas'")
+        used_f = np.zeros(C)
+        rows_B = np.nonzero(kind == 2)[0]
+        r_blk = np.ones((rows_B.size, self.N))  # family "B", rows_B order
+        for k, rows_k in ((1, np.nonzero(kind == 1)[0]), (2, rows_B)):
+            if rows_k.size == 0:
+                continue
+            bmax = float(budgets[rows_k].max())
+            for a in np.unique(a_idx[rows_k]):
+                rk = a_idx[rows_k] == a
+                got = self._schedule(k, int(a), bmax).replicas_at(
+                    budgets[rows_k[rk]]
+                )
+                if k == 1:
+                    r_layer[rows_k[rk]] = got.replicas.astype(np.float64)
+                else:
+                    r_blk[rk] = got.replicas.astype(np.float64)
+        rows_L = np.nonzero(kind != 2)[0]
+        used_f[rows_L] = (r_layer[rows_L] - 1.0) @ self.layer_arrays
+        used_f[rows_B] = ((r_blk - 1.0) * self.cost_blk).sum(axis=1)
 
         outs = {
             "total_cycles": np.zeros(C),
             "images_per_sec": np.zeros(C),
             "layer_cycles": np.zeros((C, self.L)),
             "layer_utilization": np.zeros((C, self.L)),
-            "dups_lb": np.zeros((C, self.L, self.B)),
-            "arrays_used": np.zeros(C, dtype=np.int64),
         }
-        bank = None
+        if need_dups:
+            outs["dups_lb"] = np.zeros((C, self.L, self.B))
+        tel = get_telemetry()
+        csize_max = n_chunks = 0
         with enable_x64():
-            for k in (0, 1, 2):
-                rows = np.nonzero(kind == k)[0]
+            for fam, rows, r_fam in (("L", rows_L, r_layer), ("B", rows_B, r_blk)):
                 if rows.size == 0:
                     continue
-                fn = self._fn(k, int(n_images), float(clock_hz), bool(return_bank))
+                fn = self._fn(fam, int(n_images), float(clock_hz))
                 csize = min(int(chunk), rows.size)
+                csize_max = max(csize_max, csize)
                 for j0 in range(0, rows.size, csize):
                     part = rows[j0 : j0 + csize]
                     pad = csize - part.size
@@ -435,27 +533,123 @@ class FusedPipeline:
                         if pad == 0
                         else np.concatenate([part, np.repeat(part[:1], pad)])
                     )  # pad repeating row 0: one compilation per partition
-                    out = fn(
-                        budgets[take],
-                        a_idx[take],
-                        zskip[take],
-                        layerwise[take],
-                        dups0[take],
-                    )
-                    T, ips, layer_T, util, dups, used = out[:6]
+                    # family "L" replicas index by global row; family "B" by
+                    # position (r_blk rows are laid out in rows_B order)
+                    if fam == "L":
+                        r_take = r_fam[take]
+                    else:
+                        r_take = r_fam[j0 : j0 + csize]
+                        if pad:
+                            r_take = np.concatenate(
+                                [r_take, np.repeat(r_take[:1], pad, axis=0)]
+                            )
+                    T, ips, layer_T, util, dups = fn(
+                        sel[take], layerwise[take], r_take
+                    )[:5]
                     outs["total_cycles"][part] = np.asarray(T)[: part.size]
                     outs["images_per_sec"][part] = np.asarray(ips)[: part.size]
                     outs["layer_cycles"][part] = np.asarray(layer_T)[: part.size]
                     outs["layer_utilization"][part] = np.asarray(util)[: part.size]
-                    outs["dups_lb"][part] = np.asarray(dups)[: part.size]
-                    outs["arrays_used"][part] = np.asarray(used)[: part.size]
-                    if return_bank and bank is None:
-                        bank = np.asarray(out[6])
+                    if need_dups:
+                        outs["dups_lb"][part] = np.asarray(dups)[: part.size]
+                    n_chunks += 1
+        outs["arrays_used"] = self.base_arrays + used_f.astype(np.int64)
+        # chunking telemetry: the live device set per dispatch is one tile —
+        # the (csize, L, B) replica tensor dominates — never the full C
+        # (the peak-memory smoke in tests/test_fused_dse.py reads these)
+        tel.gauge("dse.fused.chunk_configs", csize_max)
+        tel.gauge(
+            "dse.fused.chunk_device_bytes",
+            csize_max * (2 * self.L * self.B + self.N + 2 * self.L + 3) * 8,
+        )
+        tel.gauge(
+            "dse.fused.host_out_bytes", sum(a.nbytes for a in outs.values())
+        )
+        tel.count("dse.fused.chunks", n_chunks)
         outs["arrays_total"] = total
         outs["layerwise"] = layerwise
         outs["zskip"] = zskip
         if return_bank:
-            outs["bank"] = bank
+            outs["bank"] = np.asarray(self._stats(return_bank=True)[-1])
+        return outs
+
+    def _pallas_eval(
+        self, sel, a_idx, kind, budgets, layerwise, zskip, dups0, total,
+        n_images, clock_hz, chunk, need_dups, return_bank,
+    ):
+        """``engine="pallas"`` body: both greedy families flattened onto the
+        shared unit axis and pushed through ``kernels.fused_alloc_eval`` —
+        greedy + scatter + eval in one grid step per config block.
+        Proportional configs enter at budget 0 with their host-precomputed
+        replicas as the warm start (the greedy is then a no-op), so one
+        kernel serves every supported policy."""
+        from jax.experimental import enable_x64
+
+        from ..kernels.fused_alloc_eval import fused_alloc_eval
+        from .engine import flat_unit_map
+
+        stats = self._stats()
+        banks = stats[:5]
+        C = budgets.shape[0]
+        outs = {
+            "total_cycles": np.zeros(C),
+            "images_per_sec": np.zeros(C),
+            "layer_cycles": np.zeros((C, self.L)),
+            "layer_utilization": np.zeros((C, self.L)),
+        }
+        if need_dups:
+            outs["dups_lb"] = np.zeros((C, self.L, self.B))
+        used_f = np.zeros(C)
+        fams = (
+            ("L", np.nonzero(kind != 2)[0], np.asarray(stats[5]),
+             self.layer_arrays, flat_unit_map(self.L, self.B)),
+            ("B", np.nonzero(kind == 2)[0], np.asarray(stats[6]),
+             self.cost_blk, flat_unit_map(self.L, self.B, self.l_idx, self.blk_idx)),
+        )
+        with enable_x64():
+            for fam, rows, base, cost, umap in fams:
+                if rows.size == 0:
+                    continue
+                r0 = np.ones((rows.size, base.shape[1]))
+                bud = budgets[rows].copy()
+                if fam == "L":
+                    isprop = kind[rows] == 0
+                    r0[isprop] = dups0[rows[isprop]]
+                    bud[isprop] = 0.0
+                csize = min(int(chunk), rows.size)
+                for j0 in range(0, rows.size, csize):
+                    part = rows[j0 : j0 + csize]
+                    sl = slice(j0, j0 + part.size)
+                    T, ips, layer_T, util, r, _ = fused_alloc_eval(
+                        base, cost, umap, banks, self.b_mask, self.ppi,
+                        self.width, self.layer_arrays, bud[sl], a_idx[part],
+                        sel[part], layerwise[part], r0[sl],
+                        n_images=n_images, clock_hz=clock_hz,
+                        block_configs=min(csize, 128),
+                    )
+                    outs["total_cycles"][part] = np.asarray(T)
+                    outs["images_per_sec"][part] = np.asarray(ips)
+                    outs["layer_cycles"][part] = np.asarray(layer_T)
+                    outs["layer_utilization"][part] = np.asarray(util)
+                    r = np.asarray(r)
+                    if fam == "L":
+                        used_f[part] = (r - 1.0) @ self.layer_arrays
+                        if need_dups:
+                            outs["dups_lb"][part] = np.broadcast_to(
+                                r[:, :, None], (part.size, self.L, self.B)
+                            )
+                    else:
+                        used_f[part] = ((r - 1.0) * cost).sum(axis=1)
+                        if need_dups:
+                            d = np.ones((part.size, self.L, self.B))
+                            d[:, self.l_idx, self.blk_idx] = r
+                            outs["dups_lb"][part] = d
+        outs["arrays_used"] = self.base_arrays + used_f.astype(np.int64)
+        outs["arrays_total"] = total
+        outs["layerwise"] = layerwise
+        outs["zskip"] = zskip
+        if return_bank:
+            outs["bank"] = np.asarray(self._stats(return_bank=True)[-1])
         return outs
 
     # ----------------------------------------------------- fused fabric stage
@@ -525,26 +719,8 @@ class FusedPipeline:
     def _cyc_banks(self):
         banks = getattr(self, "_cyc_banks_cache", None)
         if banks is None:
-            import jax
-            import jax.numpy as jnp
-            from jax.experimental import enable_x64
-
-            from ..kernels.bitplane_profile import bitplane_cycle_bank
-
-            rows_per_read = tuple(v.rows_per_read for v in self.variants)
-            s_mask, b_mask = self.s_mask, self.b_mask
-
-            def derive(Q):
-                bank = bitplane_cycle_bank(
-                    Q, rows_per_read,
-                    cycles_per_read=self.base_array.cycles_per_read,
-                )
-                valid = s_mask[None, :, None, :] & b_mask[None, :, :, None]
-                cyc = jnp.where(valid, bank, 0).astype(jnp.float64)
-                return jnp.swapaxes(cyc, 2, 3)  # (A, L, S, B)
-
-            with enable_x64():
-                full = np.asarray(jax.jit(derive)(self.Q))
+            # the shared derive already produced the full (A, L, S, B) bank
+            full = np.asarray(self._stats(return_bank=True)[-1])
             banks = [
                 np.ascontiguousarray(
                     full[:, li, : self.S_l[li], : layer.n_blocks]
@@ -688,16 +864,27 @@ def run_fused_sweep(
     fabric: FabricEval | None = None,
     shard_devices: bool = False,
     chunk: int = 32768,
+    chunk_size: int | None = None,
+    engine: str = "xla",
 ) -> SweepResult:
     """Drop-in fused counterpart of ``run_sweep(engine="batch")``.
 
-    Groups points by (network, rows-geometry); each group's whole
-    (ADC x policy x PE-budget) config tensor runs through ONE fused jit
-    dispatch per chunk (derive -> allocate -> eval, no host round-trips),
-    optionally followed by the fused virtual-time stage for the latency
-    columns.  Results are element-wise identical to the staged path
-    (pinned by tests/test_fused_dse.py).  ``latency_aware`` points are
-    rejected — that policy is load-coupled and stays staged."""
+    Groups points by (network, rows-geometry); each group derives its
+    shared per-ADC bank stacks once, then streams the whole (ADC x policy
+    x PE-budget) config tensor through ONE fused allocate+eval dispatch
+    per chunk — no host round-trips, peak memory bounded by the chunk
+    (``chunk_size``, alias of ``chunk``; tilings are element-wise
+    identical, pinned by tests/test_fused_dse.py) — optionally followed
+    by the fused virtual-time stage for the latency columns.  Without a
+    fabric stage the per-config replica tensors are never fetched to the
+    host (``need_dups=False`` inside), so a 10^6-config analytic sweep
+    holds only (C,)/(C, L) columns.  Results are element-wise identical
+    to the staged path.  ``latency_aware`` points are rejected — that
+    policy is load-coupled and stays staged.  ``engine="pallas"`` routes
+    the analytic stage through the fused allocate+eval Pallas kernel (see
+    ``FusedPipeline.__call__``)."""
+    if chunk_size is not None:
+        chunk = int(chunk_size)
     C = len(points)
     out = {
         name: np.zeros(C)
@@ -731,7 +918,10 @@ def run_fused_sweep(
         pols = np.array([points[i].policy for i in rows], dtype=object)
         pes = np.array([points[i].n_pes for i in rows], dtype=np.int64)
         t0 = time.perf_counter()
-        res = pipe(a_idx, pols, pes, n_images=n_images, chunk=chunk)
+        res = pipe(
+            a_idx, pols, pes, n_images=n_images, chunk=chunk,
+            need_dups=fabric is not None, engine=engine,
+        )
         out["total_cycles"][idx] = res["total_cycles"]
         out["images_per_sec"][idx] = res["images_per_sec"]
         out["mean_utilization"][idx] = res["layer_utilization"].mean(axis=1)

@@ -2,6 +2,7 @@
 from . import ops, ref
 from .bitplane_profile import bitplane_block_profile, bitplane_profile
 from .flash_attention import flash_attention
+from .fused_alloc_eval import fused_alloc_eval
 from .ssd_scan import ssd_chunk
 from .zskip_matmul import zskip_matmul
 __all__ = [
@@ -10,6 +11,7 @@ __all__ = [
     "bitplane_block_profile",
     "bitplane_profile",
     "flash_attention",
+    "fused_alloc_eval",
     "ssd_chunk",
     "zskip_matmul",
 ]

@@ -1,12 +1,18 @@
 """greedy_allocate warm-start (initial_replicas=) invariants +
-proportional_allocate edge cases — the online re-allocation path.
+proportional_allocate edge cases — the online re-allocation path — plus
+the ``greedy_event_schedule`` exactness contract (the static grant-event
+table the fused DSE pipeline replays instead of re-running the greedy).
 
 No hypothesis dependency: these must run in the minimal environment."""
 
 import numpy as np
 import pytest
 
-from repro.core.alloc.greedy import greedy_allocate, proportional_allocate
+from repro.core.alloc.greedy import (
+    greedy_allocate,
+    greedy_event_schedule,
+    proportional_allocate,
+)
 
 
 def _units(seed=0, n=24):
@@ -82,6 +88,72 @@ def test_incremental_warm_start_tracks_cold_total():
     )
     assert second.makespan >= one_shot.makespan - 1e-9
     assert np.all(second.replicas >= first.replicas)
+
+
+# ------------------------------------------------------- event schedule
+def test_event_schedule_matches_heap_randomized():
+    """The schedule replays the scalar heap greedy exactly — replicas,
+    spent, leftover — across random integer problems, warm starts and
+    budget-0 edges included (the hypothesis suite widens this when the
+    dev deps are installed)."""
+    rng = np.random.default_rng(11)
+    for trial in range(40):
+        n = int(rng.integers(1, 10))
+        base = rng.integers(1, 12, size=n).astype(np.float64)
+        cost = rng.integers(1, 4, size=n).astype(np.float64)
+        r0 = (
+            rng.integers(1, 3, size=n).astype(np.int64)
+            if trial % 2
+            else None
+        )
+        budgets = rng.integers(0, 40, size=5).astype(np.float64)
+        sched = greedy_event_schedule(
+            base, cost, float(budgets.max()), initial_replicas=r0
+        )
+        got = sched.replicas_at(budgets)
+        for i, b in enumerate(budgets):
+            want = greedy_allocate(base, cost, float(b), initial_replicas=r0)
+            np.testing.assert_array_equal(
+                got.replicas[i], want.replicas, err_msg=f"trial {trial} b {b}"
+            )
+            assert got.spent[i] == want.spent
+            assert got.leftover[i] == want.leftover
+
+
+def test_event_schedule_tie_order_matches_heap():
+    """Equal priorities must grant the LOWEST unit index first — heapq
+    tuple order — observable when the budget cuts inside a tie run."""
+    base = np.array([6.0, 6.0, 6.0])
+    cost = np.array([2.0, 2.0, 2.0])
+    for b in (2.0, 4.0):  # budget affords 1 (then 2) of the 3 tied grants
+        want = greedy_allocate(base, cost, b)
+        got = greedy_event_schedule(base, cost, b).replicas_at([b])
+        np.testing.assert_array_equal(got.replicas[0], want.replicas)
+
+
+def test_event_schedule_rejects_uncovered_budget():
+    sched = greedy_event_schedule(np.array([5.0, 3.0]), np.array([1.0, 1.0]), 10.0)
+    with pytest.raises(ValueError, match="coverage"):
+        sched.replicas_at(np.array([11.0]))
+
+
+def test_event_schedule_rejects_fractional_inputs():
+    with pytest.raises(ValueError, match="integral"):
+        greedy_event_schedule(np.array([5.0]), np.array([1.5]), 10.0)
+    sched = greedy_event_schedule(np.array([5.0]), np.array([1.0]), 10.0)
+    with pytest.raises(ValueError, match="integral"):
+        sched.replicas_at(np.array([2.5]))
+
+
+def test_event_schedule_zero_and_tiny_budgets():
+    base = np.array([9.0, 4.0])
+    cost = np.array([3.0, 5.0])
+    sched = greedy_event_schedule(base, cost, 2.0)  # < min cost: empty table
+    assert len(sched) == 0
+    got = sched.replicas_at(np.array([0.0, 2.0]))
+    np.testing.assert_array_equal(got.replicas, np.ones((2, 2), dtype=np.int64))
+    np.testing.assert_array_equal(got.spent, [0.0, 0.0])
+    np.testing.assert_array_equal(got.leftover, [0.0, 2.0])
 
 
 # ------------------------------------------------------- proportional edges

@@ -1,14 +1,27 @@
 """`benchmarks/check_drift.py` CLI error handling: a missing or malformed
 BENCH_*.json must produce a single-line error on stderr and exit code 2 —
 never a traceback (the nightly log should say what to do, not where Python
-died)."""
+died).  Plus the like-for-like guard: rows stamped ``configs=<n>`` only
+have their speedup ratios compared when baseline and fresh agree on the
+grid size (a resized grid skips with a WARN, never silently passes or
+spuriously fails)."""
 
+import importlib.util
 import json
 import pathlib
 import subprocess
 import sys
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _load_check_drift():
+    spec = importlib.util.spec_from_file_location(
+        "check_drift_under_test", REPO / "benchmarks" / "check_drift.py"
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
 
 
 def _run(*args, cwd=REPO):
@@ -52,6 +65,92 @@ def test_valid_file_without_baseline_passes(tmp_path):
     r = _run("--root", str(tmp_path), "fake")
     assert r.returncode == 0, r.stderr
     assert "no baseline" in r.stdout
+
+
+def test_required_headline_keys_enforced(tmp_path):
+    """dse_fused must report BOTH acceptance ratios — dropping
+    analytic_speedup is a broken guard, not a skipped comparison."""
+    doc = {
+        "mode": "dse_fused",
+        "rows": [
+            {
+                "name": "dse_fused",
+                "us_per_call": 1.0,
+                "derived": "end_to_end_speedup=2.00x;configs=100",
+            }
+        ],
+    }
+    (tmp_path / "BENCH_dse_fused.json").write_text(json.dumps(doc))
+    r = _run("--root", str(tmp_path), "dse_fused")
+    assert r.returncode == 2
+    assert "analytic_speedup" in r.stderr
+    assert "Traceback" not in r.stderr
+
+
+def _dse_doc(e2e, analytic, configs):
+    return {
+        "mode": "dse_fused",
+        "rows": [
+            {
+                "name": "dse_fused",
+                "us_per_call": 1.0,
+                "derived": (
+                    f"end_to_end_speedup={e2e:.2f}x;"
+                    f"analytic_speedup={analytic:.2f}x;configs={configs}"
+                ),
+            }
+        ],
+    }
+
+
+def test_config_count_mismatch_skips_with_warn(tmp_path, monkeypatch, capsys):
+    """A regressed-looking ratio at a DIFFERENT grid size is not
+    like-for-like: skipped loudly, exit 0."""
+    cd = _load_check_drift()
+    (tmp_path / "BENCH_dse_fused.json").write_text(
+        json.dumps(_dse_doc(1.2, 1.1, configs=1000))
+    )
+    monkeypatch.setattr(
+        cd, "_baseline", lambda ref, name: _dse_doc(9.0, 9.0, configs=100)
+    )
+    rc = cd.main(["--root", str(tmp_path), "dse_fused"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert out.count("config count changed") == 2  # both speedup keys
+    assert "FAIL" not in out
+
+
+def test_equal_config_counts_still_compared(tmp_path, monkeypatch, capsys):
+    """Same grid size: a real regression must still fail."""
+    cd = _load_check_drift()
+    (tmp_path / "BENCH_dse_fused.json").write_text(
+        json.dumps(_dse_doc(1.2, 1.1, configs=100))
+    )
+    monkeypatch.setattr(
+        cd, "_baseline", lambda ref, name: _dse_doc(9.0, 9.0, configs=100)
+    )
+    rc = cd.main(["--root", str(tmp_path), "dse_fused"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "FAIL" in out and "config count changed" not in out
+
+
+def test_metrics_config_stamp_parsing():
+    cd = _load_check_drift()
+    doc = {
+        "rows": [
+            {
+                "name": "a",
+                "us_per_call": 5.0,
+                "derived": "speedup=2.00x;configs=128",
+            },
+            {"name": "b", "us_per_call": 5.0, "derived": "speedup=3.00x"},
+        ]
+    }
+    metrics, sizes = cd._metrics(doc, timing=True)
+    assert metrics["a.speedup"] == (2.0, True)
+    assert sizes == {"a.speedup": 128, "a.us_per_call": 128}
+    assert "b.speedup" in metrics and "b.speedup" not in sizes
 
 
 def test_default_glob_still_checks_repo_files():

@@ -160,6 +160,92 @@ def test_sharded_fused_identical_to_plain():
     _assert_equiv(plain, shard, EXACT_COLS, FLOAT_COLS)
 
 
+def _packed_grid(net="vgg11", pols=POLS, pes=(300, 557, 800)):
+    """(a_idx, policies, n_pes) columns spanning both ADC variants."""
+    P, A, N = [], [], []
+    for p in pols:
+        for a in (0, 1):
+            for n in pes:
+                P.append(p)
+                A.append(a)
+                N.append(n)
+    return (
+        np.array(A, dtype=np.int32),
+        np.array(P, dtype=object),
+        np.array(N, dtype=np.int64),
+    )
+
+
+def test_pallas_engine_matches_xla():
+    """engine="pallas" (the fused allocate+eval kernel, interpret mode
+    off-TPU) against the XLA path: discrete columns — replica tensors,
+    arrays used — exactly equal, floats within the rtol 1e-12 contract."""
+    pipe = get_fused_pipeline("vgg11", DEFAULT_ARRAY, (6, 8))
+    a_idx, pols, pes = _packed_grid(
+        pols=POLS + ("weight_blockflow",), pes=(300, 557, 800)
+    )
+    ref = pipe(a_idx, pols, pes, need_dups=True)
+    got = pipe(a_idx, pols, pes, need_dups=True, engine="pallas")
+    for k in ("arrays_used", "arrays_total", "layerwise", "zskip", "dups_lb"):
+        np.testing.assert_array_equal(ref[k], got[k], err_msg=k)
+    for k in (
+        "total_cycles", "images_per_sec", "layer_cycles", "layer_utilization"
+    ):
+        np.testing.assert_allclose(
+            ref[k], got[k], rtol=ULP_RTOL, atol=0, err_msg=k
+        )
+
+
+def test_unknown_engine_is_rejected():
+    pipe = get_fused_pipeline("vgg11", DEFAULT_ARRAY, (6,))
+    with pytest.raises(ValueError, match="engine"):
+        pipe(np.zeros(1, np.int32), ["blockwise"], [600], engine="cuda")
+
+
+@pytest.mark.parametrize("chunk", [1, 5, 10**6])
+def test_chunk_tilings_identical(chunk):
+    """chunk=1 (one dispatch per config), a non-divisor tile (pad-repeat
+    path), and chunk >= C (single dispatch) must all be element-wise
+    IDENTICAL: chunking changes dispatch boundaries, never values."""
+    pipe = get_fused_pipeline("vgg11", DEFAULT_ARRAY, (6, 8))
+    a_idx, pols, pes = _packed_grid()
+    ref = pipe(a_idx, pols, pes, need_dups=True)
+    got = pipe(a_idx, pols, pes, need_dups=True, chunk=chunk)
+    assert set(ref) == set(got)
+    for k in ref:
+        np.testing.assert_array_equal(ref[k], got[k], err_msg=f"chunk={chunk} {k}")
+
+
+def test_chunking_bounds_device_footprint():
+    """The peak-memory contract of the streamed sweep: the per-dispatch
+    device footprint scales with the TILE, not with C — read back from the
+    pipeline's telemetry gauges."""
+    from repro.fabric.telemetry import telemetry_session
+
+    pipe = get_fused_pipeline("vgg11", DEFAULT_ARRAY, (6, 8))
+    a_idx, pols, pes = _packed_grid()
+    C = len(pols)
+    n_L = int(np.sum(pols != "blockwise"))
+    n_B = C - n_L
+    per_config = (2 * pipe.L * pipe.B + pipe.N + 2 * pipe.L + 3) * 8
+    with telemetry_session() as tel:
+        pipe(a_idx, pols, pes, chunk=4, need_dups=False)
+        snap = tel.snapshot()
+    assert snap["gauges"]["dse.fused.chunk_configs"] == 4
+    assert snap["gauges"]["dse.fused.chunk_device_bytes"] == 4 * per_config
+    assert snap["counters"]["dse.fused.chunks"] == -(-n_L // 4) - (-n_B // 4)
+    assert snap["gauges"]["dse.fused.host_out_bytes"] > 0
+    with telemetry_session() as tel:
+        pipe(a_idx, pols, pes, need_dups=False)  # chunk >= C: one tile/family
+        snap_full = tel.snapshot()
+    assert snap_full["gauges"]["dse.fused.chunk_configs"] == max(n_L, n_B)
+    assert (
+        snap_full["gauges"]["dse.fused.chunk_device_bytes"]
+        == max(n_L, n_B) * per_config
+    )
+    assert snap_full["counters"]["dse.fused.chunks"] == 2  # one per family
+
+
 def test_latency_aware_is_rejected():
     pts = design_grid(
         networks=("vgg11",), policies=("latency_aware",), pe_multipliers=(2.0,)
