@@ -53,7 +53,8 @@ _CONFIGS = re.compile(r"\bconfigs=(\d+)\b")
 # headline keys that must exist whenever the file is checked; the file
 # itself is mandatory in default-glob (nightly) runs
 _REQUIRED = {
-    "BENCH_dse_fused.json": ("end_to_end_speedup", "analytic_speedup")
+    "BENCH_dse_fused.json": ("end_to_end_speedup", "analytic_speedup"),
+    "BENCH_fabric_fleet.json": ("replay_speedup",),
 }
 
 

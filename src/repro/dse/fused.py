@@ -653,8 +653,8 @@ class FusedPipeline:
         return outs
 
     # ----------------------------------------------------- fused fabric stage
-    def _fabric_fn(self, n, D_by_layer, percentiles, has_xfer):
-        key = (n, tuple(D_by_layer), tuple(percentiles), has_xfer)
+    def _fabric_fn(self, n, D_by_layer, percentiles, has_xfer, window):
+        key = (n, tuple(D_by_layer), tuple(percentiles), has_xfer, window)
         if key in self._fabric_compiled:
             return self._fabric_compiled[key]
         import functools
@@ -705,6 +705,7 @@ class FusedPipeline:
                 tuple(percentiles),
                 job_scan=job_scan,
                 xfer=xfer,
+                window=window,
             )
 
         self._fabric_compiled[key] = jax.jit(
@@ -742,12 +743,17 @@ class FusedPipeline:
         qs: tuple = (50.0, 95.0, 99.0),
         xfer: np.ndarray | None = None,  # (C, L) stage entry transfers
         lane_quantum: int = 1,
+        window: int = 8,
     ) -> np.ndarray:
         """(C, len(qs)) latency percentiles through the fused virtual-time
         kernel: per-config (ADC, zskip, dataflow) gathers against the
         in-graph-derived cycle banks, one vmapped ``lax.scan`` call per
         lane-homogeneous sub-batch.  Bit-identical to routing each config
-        through the staged ``VirtualTimeFabric``."""
+        through the staged ``VirtualTimeFabric``.
+
+        ``window`` dispatches that many requests per ``lax.scan`` step (the
+        blocked scan; non-overtaking makes any window bit-identical to
+        ``window=1``, so this is purely a host-overhead knob)."""
         from jax.experimental import enable_x64
 
         from ..fabric.vtime import sample_service_indices
@@ -795,7 +801,8 @@ class FusedPipeline:
                         np.where(np.arange(D) < d[:, :, None], 0.0, np.inf)
                     )
                 fn = self._fabric_fn(
-                    n, [f.shape[2] for f in frees], qs, xfer is not None
+                    n, [f.shape[2] for f in frees], qs, xfer is not None,
+                    int(window),
                 )
                 out = fn(
                     tuple(frees),

@@ -14,17 +14,40 @@ drift re-allocation and timelines) and the packed virtual-time kernel
 (``VirtualTimeFabric``, jit+vmap over batches of (allocation, trace) pairs,
 bit-identical to the event engine) — the latter powers latency-aware
 provisioning (``provision_latency_aware``) and the DSE latency columns.
+
+Fleet-scale replay lives in ``fleet``: a streaming variant of the kernel
+(in-kernel hashed service sampling + fixed-size latency sketches, so
+memory stays O(lanes) at million-request traces), plus segmented trace
+replay that re-allocates at control-interval boundaries with warm-started
+``greedy_allocate`` and charges array-reprogramming stalls in-kernel.
 """
 
-from .arrivals import ClosedLoop, PoissonOpen, TraceReplay, arrival_times
+from .arrivals import (
+    MMPP2,
+    ClosedLoop,
+    PoissonOpen,
+    SinusoidalPoisson,
+    TraceReplay,
+    arrival_times,
+)
 from .dispatch import FabricSim
 from .drift import DriftConfig, OnlineReallocator, shift_profile
 from .events import EventCalendar, PoolStats, ServerPool
+from .fleet import (
+    FleetResult,
+    SegmentedReplayResult,
+    SegmentReport,
+    run_stream,
+    run_trace_segments,
+    segment_growth_plan,
+)
 from .metrics import (
     FabricResult,
     FabricStats,
+    LatencySketch,
     LatencyStats,
     ReallocationEvent,
+    SketchConfig,
     latency_stats,
     steady_throughput,
 )
@@ -43,8 +66,10 @@ from .tenancy import (
     run_tenants,
 )
 from .vtime import (
+    CoarsenConfig,
     VTResult,
     VirtualTimeFabric,
+    hash_service_indices,
     provision_latency_aware,
     refine_latency_aware,
     sample_service_indices,
@@ -52,9 +77,17 @@ from .vtime import (
 
 __all__ = [
     "ClosedLoop",
+    "MMPP2",
     "PoissonOpen",
+    "SinusoidalPoisson",
     "TraceReplay",
     "arrival_times",
+    "FleetResult",
+    "SegmentReport",
+    "SegmentedReplayResult",
+    "run_stream",
+    "run_trace_segments",
+    "segment_growth_plan",
     "FabricSim",
     "DriftConfig",
     "OnlineReallocator",
@@ -64,7 +97,9 @@ __all__ = [
     "ServerPool",
     "FabricResult",
     "FabricStats",
+    "LatencySketch",
     "LatencyStats",
+    "SketchConfig",
     "Telemetry",
     "NULL_TELEMETRY",
     "get_telemetry",
@@ -78,8 +113,10 @@ __all__ = [
     "allocate_shared",
     "fairness_report",
     "run_tenants",
+    "CoarsenConfig",
     "VTResult",
     "VirtualTimeFabric",
+    "hash_service_indices",
     "provision_latency_aware",
     "refine_latency_aware",
     "sample_service_indices",

@@ -45,7 +45,7 @@ from ..core.cim.simulate import Allocation, CLOCK_HZ, _layer_patch_cycles
 from .arrivals import ArrivalProcess, ClosedLoop, arrival_times
 from .events import EventCalendar, ServerPool
 from .metrics import FabricResult, FabricStats
-from .vtime import sample_service_indices
+from .vtime import _hash_salt, hash_service_indices, sample_service_indices
 
 __all__ = ["FabricSim"]
 
@@ -78,12 +78,24 @@ class FabricSim:
         record_timeline: bool = False,
         placement=None,
         stats: bool = False,
+        service_sampling: str = "presample",
     ):
+        if service_sampling not in ("presample", "hash"):
+            raise ValueError(
+                f"service_sampling must be 'presample' or 'hash', got {service_sampling!r}"
+            )
         self.spec = spec
         self.alloc = alloc
         self.clock_hz = clock_hz
         self.reallocator = reallocator
         self.collect_stats = bool(stats)
+        # "presample" draws (N, ppi) index tensors through
+        # sample_service_indices (the seed-for-seed contract with
+        # VirtualTimeFabric.run_batch); "hash" derives the same indices the
+        # streaming fleet kernel hashes in-kernel (fleet.run_stream), so the
+        # event engine stays the bit-identity reference at fleet seeds too
+        self.service_sampling = service_sampling
+        self._seed = int(seed)
         # per-stage request entry transfer (core.cim.topology.Placement);
         # None = flat single-chip fabric, zero added work on the hot path
         self._xfer = (
@@ -183,10 +195,21 @@ class FabricSim:
         # request-major presampling (layer-major draw order): the same
         # helper, seed and order the virtual-time paths use, so per-request
         # service times are identical across engines regardless of the
-        # calendar's interleaving
-        self._svc_idx = sample_service_indices(
-            self.rng, [(st.services.shape[0], st.ppi) for st in self.stages], n
-        )
+        # calendar's interleaving; "hash" evaluates the fleet kernel's
+        # counter hash instead (vectorized over requests — same bits the
+        # streaming scan derives one request at a time)
+        if self.service_sampling == "hash":
+            self._svc_idx = [
+                hash_service_indices(
+                    np, _hash_salt(self._seed, li), np.arange(n),
+                    st.ppi, st.services.shape[0],
+                ).astype(np.int64)
+                for li, st in enumerate(self.stages)
+            ]
+        else:
+            self._svc_idx = sample_service_indices(
+                self.rng, [(st.services.shape[0], st.ppi) for st in self.stages], n
+            )
         arrivals = np.zeros(n)
         completions = np.zeros(n)
         if self.collect_stats:

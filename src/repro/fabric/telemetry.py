@@ -72,6 +72,13 @@ class Telemetry:
     def gauge(self, name: str, value: float) -> None:
         self.gauges[name] = float(value)
 
+    def gauge_max(self, name: str, value: float) -> None:
+        """Monotone-max gauge: keeps the high-water mark across updates
+        (peak RSS, peak in-flight) instead of the last write."""
+        cur = self.gauges.get(name)
+        v = float(value)
+        self.gauges[name] = v if cur is None or v > cur else cur
+
     def observe(self, name: str, value: float) -> None:
         self.histograms.setdefault(name, []).append(float(value))
 
@@ -132,6 +139,9 @@ class _NullTelemetry(Telemetry):
         pass
 
     def gauge(self, name, value):
+        pass
+
+    def gauge_max(self, name, value):
         pass
 
     def observe(self, name, value):

@@ -47,8 +47,12 @@ from .arrivals import ArrivalProcess, ClosedLoop, PoissonOpen, arrival_times
 from .metrics import LatencyStats, latency_stats, percentile_kernel, steady_throughput
 
 __all__ = [
+    "CoarsenConfig",
+    "chunk_plan",
     "dispatch_step",
+    "hash_service_indices",
     "pool_dispatch",
+    "pool_dispatch_stream",
     "sample_service_indices",
     "VTResult",
     "VirtualTimeFabric",
@@ -127,6 +131,79 @@ def pool_dispatch(xp, scan, free, t_ready, svc, b_mask, collect=False):
     return free, done, busy, wait
 
 
+def pool_dispatch_stream(xp, scan, free, t_ready, svc, b_mask):
+    """Carry-max variant of ``pool_dispatch``: accumulate the batch's
+    completion as a running max in the scan carry instead of emitting a
+    (P, B) per-job end matrix.  Float max is associative and commutative
+    (no NaNs here), so folding the ends one job at a time — seeded with
+    ``t_ready`` — produces bit-for-bit the same ``done`` as the
+    materializing reduction; the lane updates are untouched.  This is what
+    lets the fleet streaming kernel keep O(lanes) state per scan step
+    regardless of trace length."""
+    free = xp.maximum(free, t_ready)
+
+    def job(state, svc_p):
+        f, acc = state
+        f, end = dispatch_step(xp, f, svc_p)
+        acc = xp.maximum(acc, xp.where(b_mask, end, -xp.inf).max())
+        return (f, acc), None
+
+    (free, done), _ = scan(job, (free, t_ready), svc)
+    return free, done
+
+
+# ---------------------------------------------------- macro-job coarsening
+@dataclass(frozen=True)
+class CoarsenConfig:
+    """Opt-in approximation: aggregate a stage's bulk patch jobs into
+    macro-jobs of K patches (service times summed per pool), keeping the
+    last ``tail_lanes * D`` jobs exact per-patch so end-of-stage lane
+    balancing — which sets the next stage's start — is preserved.
+
+    The kernel is work-bound at one scan step per job, so chunking the bulk
+    is the honest wall-time lever: measured on VGG11 (single core),
+    ``granularity=1, tail_lanes=3`` is 2.7x with ~0.3% positive (pessimistic)
+    p50/p95/p99 bias and ``tail_lanes=2`` is 3.2x at ~2%.  Default off —
+    every exactness-pinned path passes ``coarsen=None``.
+    """
+
+    granularity: float = 1.0  # target macro-jobs per lane in the bulk
+    tail_lanes: int = 3  # exact per-patch jobs kept at stage end, x lanes
+    k_max: int = 32  # macro-job size ceiling
+
+
+def chunk_plan(n_patches: int, n_lanes: int, cfg: CoarsenConfig | None) -> tuple:
+    """Static (K, n_bulk) macro-job plan for one stage; (1, 0) means exact.
+
+    K is chosen so the bulk leaves ~``granularity * n_lanes`` macro-jobs
+    (enough to keep every lane fed), capped at ``k_max``; the plan degrades
+    to exact whenever the stage is too small to leave >= 2 bulk chunks."""
+    if cfg is None:
+        return (1, 0)
+    target = max(1, int(round(cfg.granularity * n_lanes)))
+    k = max(1, min(int(cfg.k_max), int(n_patches) // target))
+    tail = min(int(n_patches), int(cfg.tail_lanes) * int(n_lanes))
+    nb = max(0, (int(n_patches) - tail) // k)
+    if k == 1 or nb < 2:
+        return (1, 0)
+    return (k, nb)
+
+
+def _chunk_services(xp, svc, plan):
+    """Aggregate (P, B) per-patch services into the planned macro-jobs.
+
+    The K-way sum is an explicit left fold so numpy and jit accumulate in
+    the identical order (library ``sum`` reduction trees differ)."""
+    k, nb = plan
+    if nb == 0:
+        return svc
+    head = svc[: nb * k].reshape((nb, k) + svc.shape[1:])
+    acc = head[:, 0]
+    for j in range(1, k):
+        acc = acc + head[:, j]
+    return xp.concatenate([acc, svc[nb * k :]], axis=0)
+
+
 def _request_step(xp, job_scan, stages, xfer, concurrency, collect, carry, inp):
     """Run one request through every stage against the carried pool state.
 
@@ -177,9 +254,65 @@ def _request_step(xp, job_scan, stages, xfer, concurrency, collect, carry, inp):
     return (tuple(new_frees), ring), (t0, t)
 
 
+def _tree_blocks(xs, nb, w):
+    """Reshape each leaf (N, ...) -> (nb, w, ...) over the first nb*w rows."""
+    if isinstance(xs, tuple):
+        return tuple(_tree_blocks(x, nb, w) for x in xs)
+    return xs[: nb * w].reshape((nb, w) + xs.shape[1:])
+
+
+def _tree_tail(xs, lo):
+    if isinstance(xs, tuple):
+        return tuple(_tree_tail(x, lo) for x in xs)
+    return xs[lo:]
+
+
+def _scan_windowed(xp, scan, body, carry, xs, n, window):
+    """Blocked request scan: ``window`` sequential ``body`` steps per scan
+    step, cutting the scan length N -> N/W (+ a W=1 epilogue for the
+    remainder).  The block body unrolls the SAME per-request step in the
+    same order — only the loop-carried structure changes — so results are
+    bit-identical to the W=1 scan for every W (pinned in tests).  Handles
+    bodies that emit no ys (the streaming fleet kernel)."""
+    w = max(1, min(int(window), n if n else 1))
+    nb = n // w if w > 1 else 0
+    parts = []
+    if nb > 0:
+
+        def block(c, blk):
+            ys = []
+            for j in range(w):
+                c, y = body(c, _tree_index(blk, j))
+                ys.append(y)
+            if ys[0] is None:
+                return c, None
+            return c, tuple(
+                xp.stack([y[k] for y in ys]) for k in range(len(ys[0]))
+            )
+
+        carry, ys = scan(block, carry, _tree_blocks(xs, nb, w))
+        if ys is not None:
+            # (nb, w, ...) -> (nb * w, ...) restores request-major order
+            parts.append(tuple(y.reshape((nb * w,) + y.shape[2:]) for y in ys))
+        done = nb * w
+    else:
+        done = 0
+    if done < n:
+        carry, ys = scan(body, carry, _tree_tail(xs, done))
+        if ys is not None:
+            parts.append(ys)
+    if not parts:
+        return carry, None
+    if len(parts) == 1:
+        return carry, parts[0]
+    return carry, tuple(
+        xp.concatenate([p[k] for p in parts]) for k in range(len(parts[0]))
+    )
+
+
 def run_fabric_kernel(
     xp, scan, stages, frees, arrivals, idx, concurrency, percentiles,
-    job_scan=None, xfer=None, collect_stats=False,
+    job_scan=None, xfer=None, collect_stats=False, window=1, return_state=False,
 ):
     """Whole-run recurrence: scan ``_request_step`` over requests, then
     reduce per-request latencies to percentiles — one fused computation in
@@ -187,11 +320,21 @@ def run_fabric_kernel(
     ``scan``) drives the inner per-job loop; ``xfer`` is this config's (L,)
     stage transfer vector (or None for the flat fabric).
 
+    ``window`` processes W requests per scan step (``_scan_windowed``),
+    exploiting the non-overtaking property to shorten the scan N -> N/W
+    bit-identically; the window auto-clamps to the closed-loop concurrency,
+    where admission forces request k to wait on request k - concurrency and
+    a wider block buys nothing.
+
     ``collect_stats=True`` returns two extra (L,) vectors — total busy
     (service) cycles and queue-wait cycles per layer, accumulated through
     the scan carry.  They reconcile with the event engine's ``PoolStats``
     counters to float64 summation-order tolerance (scalar ``+=`` there vs.
     ``xp.sum`` here); completions/percentiles are bit-identical either way.
+
+    ``return_state=True`` appends the final (frees, ring) carry to the
+    outputs — the hook segmented replay uses to hand lane state across
+    control-interval boundaries.
     """
     n = arrivals.shape[0]
     ring = xp.zeros(concurrency if concurrency is not None else 1)
@@ -200,18 +343,24 @@ def run_fabric_kernel(
     body = partial(
         _request_step, xp, job_scan or scan, stages, xfer, concurrency, collect_stats
     )
+    if concurrency is not None:
+        window = min(int(window), int(concurrency))
     if collect_stats:
         zeros = tuple(xp.zeros(()) for _ in stages)
-        carry, (t_arr, comp) = scan(
-            body, (frees, ring, zeros, zeros), (xp.arange(n), arrivals, idx)
-        )
-        lat = comp - t_arr
-        pct = percentile_kernel(xp, lat, percentiles)
-        return t_arr, comp, pct, xp.stack(carry[2]), xp.stack(carry[3])
-    (_, _), (t_arr, comp) = scan(body, (frees, ring), (xp.arange(n), arrivals, idx))
+        carry0 = (frees, ring, zeros, zeros)
+    else:
+        carry0 = (frees, ring)
+    carry, (t_arr, comp) = _scan_windowed(
+        xp, scan, body, carry0, (xp.arange(n), arrivals, idx), n, window
+    )
     lat = comp - t_arr
     pct = percentile_kernel(xp, lat, percentiles)
-    return t_arr, comp, pct
+    out = (t_arr, comp, pct)
+    if collect_stats:
+        out = out + (xp.stack(carry[2]), xp.stack(carry[3]))
+    if return_state:
+        out = out + (carry[0], carry[1])
+    return out
 
 
 def _tree_index(xs, j):
@@ -254,6 +403,40 @@ def sample_service_indices(rng: np.random.Generator, dims, n_requests: int):
     return [
         rng.integers(0, s, size=(int(n_requests), int(ppi))) for s, ppi in dims
     ]
+
+
+def _hash_salt(seed: int, layer: int) -> int:
+    """Per-(seed, layer) salt for ``hash_service_indices`` — plain python
+    int, mixed host-side so the kernel hashes only (request, patch)."""
+    return (int(seed) * 0x9E3779B9 + (int(layer) + 1) * 0xC2B2AE35) & 0xFFFFFFFF
+
+
+def hash_service_indices(xp, salt, r, n_patches, n_samples):
+    """Counter-based service-sample indices: a splitmix-style uint32 hash of
+    (salt, request, patch), evaluated in-kernel.
+
+    Presampling (``sample_service_indices``) materializes per-layer (N, ppi)
+    int64 tensors — tens of GB at fleet scale (10^6 requests x ~1.5k patches)
+    — so the streaming replay derives each request's indices on the fly
+    instead.  Pure uint32 array arithmetic (multiply/xor/shift wrap
+    identically under numpy and jit), so every engine sees the same indices:
+    ``r`` may be a traced scalar (one request inside the scan) or an (N,)
+    vector (``FabricSim``'s vectorized draw); the result broadcasts to
+    ``r.shape + (n_patches,)``.  The final modulo is bias-free whenever
+    ``n_samples`` is a power of two (the profiler's sample counts are) and
+    biased by < n_samples/2^32 otherwise.
+    """
+    u = xp.uint32
+    r32 = xp.asarray(r).astype(u)[..., None]
+    p = xp.arange(n_patches, dtype=u)
+    h = (p + u(1)) * u(0x9E3779B9)
+    h = h + (r32 + u(1)) * u(0x85EBCA6B) + u(salt)
+    h = h ^ (h >> 16)
+    h = h * u(0x7FEB352D)
+    h = h ^ (h >> 15)
+    h = h * u(0x846CA68B)
+    h = h ^ (h >> 16)
+    return (h % u(n_samples)).astype(xp.int32)
 
 
 @dataclass(frozen=True)
@@ -443,7 +626,10 @@ class VirtualTimeFabric:
                 )
         return out
 
-    def _jax_runner(self, g: _GroupPack, concurrency, n, percentiles, collect=False):
+    def _jax_runner(
+        self, g: _GroupPack, concurrency, n, percentiles, collect=False,
+        window=1, return_state=False,
+    ):
         """Cached jit(vmap) of the shared kernel for one group structure."""
         has_xfer = g.xfer is not None
         key = (
@@ -455,6 +641,8 @@ class VirtualTimeFabric:
             tuple(f.shape[1:] for f in g.frees),
             has_xfer,
             collect,  # stats-on kernels compile separately (extra outputs)
+            window,
+            return_state,
         )
         if key not in self._compiled:
             import functools
@@ -476,7 +664,8 @@ class VirtualTimeFabric:
                 return run_fabric_kernel(
                     jnp, jax.lax.scan, stages, frees, arrivals, idx,
                     concurrency, percentiles, job_scan=job_scan, xfer=xfer,
-                    collect_stats=collect,
+                    collect_stats=collect, window=window,
+                    return_state=return_state,
                 )
 
             self._compiled[key] = jax.jit(
@@ -495,6 +684,7 @@ class VirtualTimeFabric:
         percentiles: tuple = (50.0, 95.0, 99.0),
         placements: list | None = None,
         collect_stats: bool = False,
+        window: int = 1,
     ) -> VTResult:
         """Evaluate C allocations against one shared arrival process (or a
         per-allocation list of same-kind processes).  Service times are
@@ -508,7 +698,11 @@ class VirtualTimeFabric:
 
         ``collect_stats=True`` additionally populates ``VTResult.layer_busy``
         / ``layer_wait`` (C, L) from in-kernel accumulators; completion times
-        and percentiles are bit-identical with the flag on or off."""
+        and percentiles are bit-identical with the flag on or off.
+
+        ``window`` blocks the request scan W-at-a-time (bit-identical for
+        every W; auto-clamped to the closed-loop concurrency) — the
+        fleet-replay scan-length lever, safe to raise on long traces."""
         if engine not in ("jax", "numpy"):
             raise ValueError(f"engine must be 'jax' or 'numpy', got {engine!r}")
         allocs = list(allocs)
@@ -563,7 +757,8 @@ class VirtualTimeFabric:
                 from jax.experimental import enable_x64
 
                 fn = self._jax_runner(
-                    g, concurrency, n, tuple(percentiles), collect=collect_stats
+                    g, concurrency, n, tuple(percentiles),
+                    collect=collect_stats, window=window,
                 )
                 with enable_x64():
                     out = fn(g.frees, g.xfer, times[g.rows], tuple(idx))
@@ -581,7 +776,7 @@ class VirtualTimeFabric:
                         np, _np_scan, g.stages, frees, times[row],
                         tuple(idx), concurrency, tuple(percentiles),
                         xfer=None if g.xfer is None else g.xfer[k],
-                        collect_stats=collect_stats,
+                        collect_stats=collect_stats, window=window,
                     )
                     t_arr[k], comp[k], pct[k] = out[:3]
                     if collect_stats:

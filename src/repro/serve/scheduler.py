@@ -10,6 +10,12 @@ step (the paper's "send work to the next available block").
 `simulate_*` are analytic slot-step counters (the serving counterpart of
 core/cim/simulate.py); `Scheduler` drives the real slot engine
 (serve/engine.py) for the runnable demo.
+
+``fabric_slot_plan`` closes the loop with the fabric runtime: the fleet
+replay (``fabric.fleet``) reports per-allocation tail latency for a day of
+traffic, and the slot plan scales each allocation's decode batch so the
+fabric stays inside its latency SLO — slots above the plan sit dormant
+(``reset_slots``) until a re-allocation earns them back.
 """
 
 from __future__ import annotations
@@ -20,6 +26,7 @@ import numpy as np
 
 __all__ = [
     "WorkloadConfig",
+    "fabric_slot_plan",
     "sample_lengths",
     "simulate_static",
     "simulate_continuous",
@@ -46,6 +53,28 @@ def sample_lengths(cfg: WorkloadConfig) -> np.ndarray:
     else:
         raise ValueError(cfg.dist)
     return np.maximum(out.astype(np.int64), 1)
+
+
+def fabric_slot_plan(
+    p99_cycles, slo_cycles: float, n_slots: int, min_slots: int = 1
+) -> np.ndarray:
+    """Per-allocation decode slot budget from replayed tail latency.
+
+    First-order admission control: an allocation whose replayed p99 exceeds
+    the SLO is oversubscribed, and shrinking its decode batch shrinks its
+    offered load proportionally — so grant ``floor(n_slots * slo / p99)``
+    slots (clipped to ``[min_slots, n_slots]``); allocations inside the SLO
+    keep the full batch.  Configs with no traffic (p99 = 0) keep full slots.
+    """
+    if not slo_cycles > 0:
+        raise ValueError(f"slo_cycles must be positive, got {slo_cycles}")
+    if not 1 <= min_slots <= n_slots:
+        raise ValueError(
+            f"need 1 <= min_slots <= n_slots, got {min_slots}, {n_slots}"
+        )
+    p99 = np.asarray(p99_cycles, dtype=np.float64)
+    frac = np.where(p99 > 0, np.minimum(slo_cycles / np.maximum(p99, 1e-300), 1.0), 1.0)
+    return np.clip(np.floor(n_slots * frac), min_slots, n_slots).astype(np.int64)
 
 
 @dataclass(frozen=True)

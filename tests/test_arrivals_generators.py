@@ -1,0 +1,99 @@
+"""Non-stationary arrival generators (``fabric.arrivals``): the diurnal
+sinusoidal-rate Poisson and the 2-state MMPP burst model that feed the
+fleet replay bench.  Seeded, nondecreasing by construction, with empirical
+rates matching the requested envelopes; plus the existing trace contract
+(backwards time rejected with position)."""
+
+import numpy as np
+import pytest
+
+from repro.fabric import (
+    MMPP2,
+    SinusoidalPoisson,
+    TraceReplay,
+    arrival_times,
+)
+
+
+def test_sinusoidal_monotone_seeded_and_sized():
+    p = SinusoidalPoisson(n_requests=5000, base_rate=1e-3, period=2e6, seed=7)
+    t = arrival_times(p)
+    assert t.shape == (5000,)
+    assert np.all(np.diff(t) >= 0)
+    np.testing.assert_array_equal(t, arrival_times(p))  # same seed
+    assert not np.array_equal(
+        t, arrival_times(SinusoidalPoisson(5000, 1e-3, 2e6, seed=8))
+    )
+
+
+def test_sinusoidal_rate_envelope():
+    """Empirical arrival counts track base_rate * (1 + A sin(...)) — peak
+    phase bins must be busier than trough bins, and the overall mean rate
+    lands near base_rate (thinning is exact, not approximate)."""
+    base, period, amp = 2e-3, 1e6, 0.8
+    t = arrival_times(
+        SinusoidalPoisson(60000, base_rate=base, period=period, amplitude=amp, seed=0)
+    )
+    mean_rate = t.size / t[-1]
+    assert abs(mean_rate - base) / base < 0.05
+    phase = (t % period) / period
+    peak = np.sum((phase > 0.15) & (phase < 0.35))  # sin ~ +1 around 0.25
+    trough = np.sum((phase > 0.65) & (phase < 0.85))  # sin ~ -1 around 0.75
+    expect = (1 + amp) / (1 - amp)
+    ratio = peak / max(trough, 1)
+    assert 0.6 * expect < ratio < 1.4 * expect
+
+
+def test_sinusoidal_flat_amplitude_is_poisson_rate():
+    t = arrival_times(SinusoidalPoisson(40000, base_rate=5e-3, period=1e5, amplitude=0.0))
+    rate = t.size / t[-1]
+    assert abs(rate - 5e-3) / 5e-3 < 0.05
+
+
+def test_sinusoidal_validation():
+    with pytest.raises(ValueError, match="base_rate"):
+        arrival_times(SinusoidalPoisson(10, base_rate=0.0, period=1e5))
+    with pytest.raises(ValueError, match="amplitude"):
+        arrival_times(SinusoidalPoisson(10, base_rate=1e-3, period=1e5, amplitude=1.5))
+    with pytest.raises(ValueError, match="period"):
+        arrival_times(SinusoidalPoisson(10, base_rate=1e-3, period=0.0))
+
+
+def test_mmpp2_monotone_seeded_and_sized():
+    p = MMPP2(3000, rate0=1e-4, rate1=5e-3, mean_sojourn0=1e6, mean_sojourn1=2e5, seed=3)
+    t = arrival_times(p)
+    assert t.shape == (3000,)
+    assert np.all(np.diff(t) >= 0)
+    np.testing.assert_array_equal(t, arrival_times(p))
+
+
+def test_mmpp2_burstier_than_poisson():
+    """The MMPP's inter-arrival coefficient of variation must exceed the
+    exponential's (CV = 1): that's the point of the burst state."""
+    t = arrival_times(
+        MMPP2(30000, rate0=1e-4, rate1=1e-2, mean_sojourn0=5e5, mean_sojourn1=5e4, seed=0)
+    )
+    gaps = np.diff(t)
+    cv = gaps.std() / gaps.mean()
+    assert cv > 1.3
+
+
+def test_mmpp2_mean_rate_matches_state_mix():
+    """Long-run rate = (r0 s0 + r1 s1) / (s0 + s1)."""
+    r0, r1, s0, s1 = 5e-4, 5e-3, 3e5, 1e5
+    t = arrival_times(MMPP2(80000, r0, r1, s0, s1, seed=1))
+    want = (r0 * s0 + r1 * s1) / (s0 + s1)
+    got = t.size / t[-1]
+    assert abs(got - want) / want < 0.10
+
+
+def test_mmpp2_validation():
+    with pytest.raises(ValueError, match="rates"):
+        arrival_times(MMPP2(10, 0.0, 0.0, 1e5, 1e5))
+    with pytest.raises(ValueError, match="sojourn"):
+        arrival_times(MMPP2(10, 1e-3, 1e-2, 0.0, 1e5))
+
+
+def test_trace_backwards_time_still_rejected_with_position():
+    with pytest.raises(ValueError, match="nondecreasing.*index 2"):
+        arrival_times(TraceReplay(np.array([0.0, 5.0, 3.0, 9.0])))

@@ -153,6 +153,57 @@ def test_metrics_config_stamp_parsing():
     assert "b.speedup" in metrics and "b.speedup" not in sizes
 
 
+def test_fleet_replay_speedup_required(tmp_path):
+    """BENCH_fabric_fleet.json without its replay_speedup headline is a
+    broken guard — exit 2 naming the key, not a silent pass."""
+    doc = {
+        "mode": "fabric_fleet",
+        "rows": [
+            {"name": "fabric_fleet", "us_per_call": 1.0, "derived": "requests=1000000"}
+        ],
+    }
+    (tmp_path / "BENCH_fabric_fleet.json").write_text(json.dumps(doc))
+    r = _run("--root", str(tmp_path), "fabric_fleet")
+    assert r.returncode == 2
+    assert "replay_speedup" in r.stderr
+    assert "Traceback" not in r.stderr
+
+
+def test_fleet_replay_speedup_satisfied(tmp_path):
+    doc = {
+        "mode": "fabric_fleet",
+        "rows": [
+            {
+                "name": "fabric_fleet",
+                "us_per_call": 1.0,
+                "derived": "replay_speedup=3.40x;configs=2;requests=1000000",
+            }
+        ],
+    }
+    (tmp_path / "BENCH_fabric_fleet.json").write_text(json.dumps(doc))
+    r = _run("--root", str(tmp_path), "fabric_fleet")
+    assert r.returncode == 0, r.stderr
+
+
+def test_fleet_bench_file_required_in_default_glob(tmp_path):
+    """The nightly default glob must refuse to run without the committed
+    fleet bench file (same contract as BENCH_dse_fused.json)."""
+    doc = {
+        "mode": "dse_fused",
+        "rows": [
+            {
+                "name": "dse_fused",
+                "us_per_call": 1.0,
+                "derived": "end_to_end_speedup=2.00x;analytic_speedup=2.00x",
+            }
+        ],
+    }
+    (tmp_path / "BENCH_dse_fused.json").write_text(json.dumps(doc))
+    r = _run("--root", str(tmp_path))
+    assert r.returncode == 2
+    assert "BENCH_fabric_fleet.json" in r.stderr
+
+
 def test_default_glob_still_checks_repo_files():
     """Without positional modes the committed BENCH files are compared to
     HEAD — the committed numbers must never regress against themselves."""

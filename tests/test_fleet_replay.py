@@ -1,0 +1,300 @@
+"""Fleet-scale trace replay: blocked scan, streaming sketches, segments.
+
+Three contracts, each pinned bit-for-bit where the design promises it:
+
+  * the blocked request scan (``window=W``) is the SAME computation as the
+    W=1 scan — non-overtaking means the W-unrolled body performs identical
+    IEEE operations in identical order, for every W, engine and loop shape;
+  * the streaming path (``run_stream``: in-kernel hashed service draws +
+    in-carry sketch) equals the event engine run at the same hash seed and
+    its own numpy replay, and its materializing baseline mode reproduces the
+    stream sketch from the identical kernel;
+  * segmented replay with NO allocation change is a no-op (bit-identical to
+    the unsegmented run, stream and materializing), growth charges exactly
+    ``DriftConfig.stall`` at each boundary, and shrinking is rejected.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.cim import allocate, simulate
+from repro.core.cim.simulate import CLOCK_HZ
+from repro.fabric import (
+    ClosedLoop,
+    CoarsenConfig,
+    DriftConfig,
+    FabricSim,
+    PoissonOpen,
+    TraceReplay,
+    VirtualTimeFabric,
+    arrival_times,
+    hash_service_indices,
+    run_stream,
+    run_trace_segments,
+    segment_growth_plan,
+)
+from repro.fabric.vtime import _hash_salt
+
+
+@pytest.fixture(scope="module")
+def vgg(profiled):
+    return profiled("vgg11", n_images=1, sample_patches=64)
+
+
+@pytest.fixture(scope="module")
+def setup(vgg):
+    spec, prof = vgg
+    bw = allocate(spec, prof, "blockwise", spec.min_pes() * 2)
+    cap = simulate(spec, prof, bw, n_images=64).images_per_sec
+    vt = VirtualTimeFabric(spec, prof)
+    return spec, prof, bw, cap, vt
+
+
+def _open_proc(cap, n=60, frac=0.6, seed=5):
+    return PoissonOpen(n_requests=n, rate_per_cycle=frac * cap / CLOCK_HZ, seed=seed)
+
+
+# ---------------------------------------------------------- blocked scan
+@pytest.mark.parametrize("window", [2, 5, 8])
+def test_window_bit_identical_open_loop_jax(setup, window):
+    """W > 1 == W = 1, including W that does not divide N (epilogue)."""
+    spec, prof, bw, cap, vt = setup
+    proc = _open_proc(cap, n=61)
+    ref = vt.run_batch([bw], proc, seed=3, engine="jax", window=1)
+    got = vt.run_batch([bw], proc, seed=3, engine="jax", window=window)
+    np.testing.assert_array_equal(got.completions, ref.completions)
+    np.testing.assert_array_equal(got.arrivals, ref.arrivals)
+
+
+def test_window_bit_identical_numpy(setup):
+    spec, prof, bw, cap, vt = setup
+    proc = _open_proc(cap, n=47)
+    ref = vt.run_batch([bw], proc, seed=3, engine="numpy", window=1)
+    got = vt.run_batch([bw], proc, seed=3, engine="numpy", window=5)
+    np.testing.assert_array_equal(got.completions, ref.completions)
+
+
+def test_window_clamped_to_closed_loop_concurrency(setup):
+    """A closed loop admits from the completion ring: dispatch order only
+    stays causal for W <= concurrency, so the kernel clamps — W=16 at
+    concurrency 4 must equal W=1 (and the event engine)."""
+    spec, prof, bw, cap, vt = setup
+    proc = ClosedLoop(n_requests=30, concurrency=4)
+    ref = FabricSim(spec, prof, bw, seed=1).run(proc)
+    for engine in ("jax", "numpy"):
+        got = vt.run_batch([bw], proc, seed=1, engine=engine, window=16)
+        np.testing.assert_array_equal(got.completions[0], ref.completions)
+
+
+def test_fused_pipeline_blocked_scan_unchanged(vgg):
+    """The fused DSE fabric stage adopted the blocked scan (window=8
+    default); any window must reproduce window=1 exactly."""
+    pytest.importorskip("jax")
+    from repro.core.cim.cost import DEFAULT_ARRAY
+    from repro.dse.fused import get_fused_pipeline
+
+    pipe = get_fused_pipeline("vgg11", DEFAULT_ARRAY, (6, 7), sample_patches=64)
+    rng = np.random.default_rng(0)
+    C, n = 3, 25
+    a_idx = np.array([0, 1, 0], dtype=np.int32)
+    dups = np.ones((C, pipe.L, pipe.B))
+    lw = np.array([False, True, False])
+    z = np.array([True, True, False])
+    times = np.sort(rng.uniform(0, 1e6, size=(C, n)), axis=1)
+    p1 = pipe.fabric_percentiles(a_idx, dups, lw, z, times, seed=2, window=1)
+    p8 = pipe.fabric_percentiles(a_idx, dups, lw, z, times, seed=2, window=8)
+    np.testing.assert_array_equal(p1, p8)
+
+
+# ------------------------------------------------------------- hash draws
+def test_hash_indices_vectorize_and_bound():
+    salt = _hash_salt(7, 3)
+    ix = hash_service_indices(np, salt, np.arange(11), 9, 64)
+    assert ix.shape == (11, 9) and ix.dtype == np.int32
+    assert ix.min() >= 0 and ix.max() < 64
+    # request-scalar evaluation is the same stream (the in-kernel view)
+    for r in range(11):
+        np.testing.assert_array_equal(
+            hash_service_indices(np, salt, r, 9, 64), ix[r]
+        )
+
+
+def test_hash_indices_jax_matches_numpy():
+    pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    salt = _hash_salt(0, 1)
+    ref = hash_service_indices(np, salt, np.arange(17), 5, 128)
+    got = np.asarray(hash_service_indices(jnp, salt, jnp.arange(17), 5, 128))
+    np.testing.assert_array_equal(got, ref)
+
+
+# ------------------------------------------------------------- run_stream
+def test_stream_equals_event_engine_hash_mode(setup):
+    """The cross-engine pin at fleet seeds: FabricSim consuming the same
+    counter hash produces the identical latency population — sketch bucket
+    counts, exact min/max/mean and makespan all equal."""
+    spec, prof, bw, cap, vt = setup
+    proc = _open_proc(cap, n=80)
+    fr = run_stream(vt, [bw], proc, seed=5, engine="jax", window=8)
+    ref = FabricSim(spec, prof, bw, seed=5, service_sampling="hash").run(proc)
+    lat = ref.completions - ref.arrivals
+    s = fr.sketches[0]
+    ref_sk = type(s).from_latencies(lat, s.config)
+    np.testing.assert_array_equal(s.counts, ref_sk.counts)
+    assert s.min == lat.min() and s.max == lat.max()
+    np.testing.assert_allclose(s.mean, lat.mean(), rtol=1e-12)
+    assert fr.makespan[0] == ref.completions.max()
+
+
+def test_stream_numpy_equals_jax(setup):
+    spec, prof, bw, cap, vt = setup
+    proc = _open_proc(cap, n=50)
+    a = run_stream(vt, [bw], proc, seed=2, engine="jax", window=8)
+    b = run_stream(vt, [bw], proc, seed=2, engine="numpy", window=3)
+    for sa, sb in zip(a.sketches, b.sketches):
+        np.testing.assert_array_equal(sa.counts, sb.counts)
+        assert (sa.min, sa.max, sa.mean, sa.m2) == (sb.min, sb.max, sb.mean, sb.m2)
+    np.testing.assert_array_equal(a.makespan, b.makespan)
+
+
+def test_materialize_baseline_same_kernel(setup):
+    """materialize=True (the O(N)-memory baseline) runs the identical
+    kernel: its in-carry sketch equals the streaming run's, and its exact
+    percentiles bound the sketch estimates within config.rel_error."""
+    spec, prof, bw, cap, vt = setup
+    proc = _open_proc(cap, n=120)
+    fr = run_stream(vt, [bw], proc, seed=5, engine="jax", window=8)
+    fm = run_stream(vt, [bw], proc, seed=5, engine="jax", window=1, materialize=True)
+    np.testing.assert_array_equal(fr.sketches[0].counts, fm.sketches[0].counts)
+    assert fm.completions.shape == (1, 120)
+    exact = fm.exact_percentiles
+    rel = np.abs(fr.percentiles - exact) / exact
+    assert rel.max() <= fr.sketches[0].config.rel_error
+    # sketch min/max/mean are exact, not bucketized
+    lat = (fm.completions - fm.arrivals)[0]
+    assert fr.sketches[0].min == lat.min() and fr.sketches[0].max == lat.max()
+    np.testing.assert_allclose(fr.sketches[0].mean, lat.mean(), rtol=1e-12)
+
+
+def test_coarsen_is_pessimistic_and_close(setup):
+    """Macro-job chunking may only push latency UP (the chunk barrier waits
+    for the whole chunk) and stays within a loose documented band."""
+    spec, prof, bw, cap, vt = setup
+    proc = _open_proc(cap, n=80)
+    exact = run_stream(vt, [bw], proc, seed=5, engine="numpy", window=4)
+    co = run_stream(
+        vt, [bw], proc, seed=5, engine="numpy", window=4,
+        coarsen=CoarsenConfig(tail_lanes=2),
+    )
+    assert co.sketches[0].mean >= exact.sketches[0].mean
+    assert co.percentiles[0, 2] <= 1.10 * exact.percentiles[0, 2]
+
+
+# ------------------------------------------------------ segmented replay
+@pytest.fixture(scope="module")
+def growth(setup):
+    spec, prof, bw, cap, vt = setup
+    plan = segment_growth_plan(spec, prof, bw, budgets=[64, 128])
+    return plan
+
+
+def test_growth_plan_monotone_and_warm_started(setup, growth):
+    spec, prof, bw, cap, vt = setup
+    used = [a.arrays_used for a in growth]
+    assert used[0] == bw.arrays_used and used[1] > used[0] and used[2] > used[1]
+    for prev, cur in zip(growth, growth[1:]):
+        for dp, dc in zip(prev.block_dups, cur.block_dups):
+            assert np.all(np.asarray(dc) >= np.asarray(dp))  # growth-only
+
+
+@pytest.mark.parametrize("stream", [True, False])
+def test_segmented_noop_is_bit_identical(setup, stream):
+    """Same allocation in every segment, zero growth -> segmentation is
+    invisible: stream mode equals the unsegmented streaming sketch, and
+    materializing mode equals run_batch completions."""
+    spec, prof, bw, cap, vt = setup
+    times = arrival_times(_open_proc(cap, n=37))
+    bounds = [times[12] + 0.5, times[25] + 0.5]
+    res = run_trace_segments(
+        vt, [bw, bw, bw], times, bounds, seed=4, engine="numpy", window=4,
+        stream=stream, pad_to=8,
+    )
+    assert res.total_stall_cycles.max() == 0.0
+    if stream:
+        ref = run_stream(
+            vt, [bw], TraceReplay(times), seed=4, engine="numpy", window=4
+        )
+        np.testing.assert_array_equal(res.sketches[0].counts, ref.sketches[0].counts)
+        assert res.sketches[0].mean == ref.sketches[0].mean
+        np.testing.assert_array_equal(res.makespan, ref.makespan)
+    else:
+        ref = vt.run_batch([bw], TraceReplay(times), seed=4, engine="numpy")
+        np.testing.assert_array_equal(res.completions, ref.completions)
+
+
+def test_segmented_growth_charges_stall(setup, growth):
+    """A boundary that reprograms arrays freezes every lane until
+    boundary + DriftConfig.stall(added) — completions after the boundary
+    can only move later vs the no-growth replay, and the reports carry the
+    exact event-engine stall."""
+    spec, prof, bw, cap, vt = setup
+    drift = DriftConfig()
+    times = arrival_times(_open_proc(cap, n=40))
+    bounds = [float(times[15]) + 0.5, float(times[28]) + 0.5]
+    res = run_trace_segments(
+        vt, [[a] for a in growth], times, bounds, drift=drift, seed=4,
+        engine="numpy", window=4, stream=False, pad_to=8,
+    )
+    added = [s.arrays_added[0] for s in res.segments]
+    stalls = [s.stall_cycles[0] for s in res.segments]
+    assert added[0] == 0 and added[1] > 0 and added[2] > 0
+    for a, s in zip(added[1:], stalls[1:]):
+        assert s == drift.stall(int(a))
+    flat = run_trace_segments(
+        vt, [bw, bw, bw], times, bounds, seed=4, engine="numpy", window=4,
+        stream=False, pad_to=8,
+    )
+    # the first segment is untouched; later requests never complete earlier
+    # than the frozen fabric allows and the stall is visible in at least one
+    n0 = res.segments[0].n_requests
+    np.testing.assert_array_equal(
+        res.completions[0, :n0], flat.completions[0, :n0]
+    )
+    assert res.completions[0, n0:].min() >= bounds[0] + stalls[1]
+
+
+def test_segmented_stream_engines_and_padding_agree(setup, growth):
+    """Growth replay is engine- and padding-invariant: numpy at pad 8 and
+    jit at pad 16 (different numbers of carry-masked padding requests, same
+    valid work) produce identical sketches and makespans."""
+    spec, prof, bw, cap, vt = setup
+    times = arrival_times(_open_proc(cap, n=40))
+    bounds = [float(times[15]) + 0.5, float(times[28]) + 0.5]
+    segs = [[a] for a in growth]
+    st = run_trace_segments(
+        vt, segs, times, bounds, seed=4, engine="numpy", window=4,
+        stream=True, pad_to=8,
+    )
+    mt = run_trace_segments(
+        vt, segs, times, bounds, seed=4, engine="jax", window=4,
+        stream=True, pad_to=16,
+    )
+    np.testing.assert_array_equal(st.sketches[0].counts, mt.sketches[0].counts)
+    assert st.sketches[0].mean == mt.sketches[0].mean
+    np.testing.assert_array_equal(st.makespan, mt.makespan)
+
+
+def test_segmented_rejects_shrink_and_closed_loop(setup, growth):
+    spec, prof, bw, cap, vt = setup
+    times = np.linspace(0.0, 1e6, 10)
+    with pytest.raises(ValueError, match="growth-only"):
+        run_trace_segments(
+            vt, [growth[1], growth[0]], times, [5e5], engine="numpy"
+        )
+    with pytest.raises(ValueError, match="open-loop"):
+        run_trace_segments(
+            vt, [bw, bw], ClosedLoop(10, 4), [5e5], engine="numpy"
+        )
+    with pytest.raises(ValueError, match="boundaries"):
+        run_trace_segments(vt, [bw, bw, bw], times, [5e5], engine="numpy")

@@ -196,3 +196,79 @@ def test_utilization_bounds():
         for sim in (simulate_static, simulate_continuous):
             s = sim(lens, n_slots)
             assert 0 < s.utilization <= 1.0 + 1e-9
+
+
+# ----------------------------------------------- fabric co-scheduling loop
+def test_fabric_slot_plan_grants():
+    from repro.serve.scheduler import fabric_slot_plan
+
+    slots = fabric_slot_plan([1e6, 4e6, 0.0], slo_cycles=2e6, n_slots=8)
+    np.testing.assert_array_equal(slots, [8, 4, 8])  # inside SLO / 2x over / idle
+    assert fabric_slot_plan([1e9], 1e3, 8, min_slots=2)[0] == 2  # floor
+    with pytest.raises(ValueError):
+        fabric_slot_plan([1.0], 0.0, 8)
+    with pytest.raises(ValueError):
+        fabric_slot_plan([1.0], 1.0, 8, min_slots=9)
+
+
+def test_segmented_replay_drives_dormant_slot_lifecycle(setup, profiled):
+    """End-to-end co-scheduling smoke: a segmented fleet replay produces
+    per-allocation p99s, ``fabric_slot_plan`` converts them to decode slot
+    budgets, the analytic scheduler runs at that budget, and the real slot
+    engine parks the revoked slots dormant — without perturbing the live
+    ones (the dormant-slot machinery under a fabric-driven mask)."""
+    from repro.core.cim import allocate, simulate
+    from repro.core.cim.simulate import CLOCK_HZ
+    from repro.fabric import (
+        PoissonOpen,
+        VirtualTimeFabric,
+        arrival_times,
+        run_trace_segments,
+        segment_growth_plan,
+    )
+    from repro.serve.scheduler import fabric_slot_plan
+
+    spec, prof = profiled("vgg11", n_images=1, sample_patches=64)
+    bw = allocate(spec, prof, "blockwise", spec.min_pes() * 2)
+    cap = simulate(spec, prof, bw, n_images=64).images_per_sec
+    vt = VirtualTimeFabric(spec, prof)
+    plan = segment_growth_plan(spec, prof, bw, budgets=[64])
+    # two candidate allocations: static small vs grown-at-boundary
+    times = arrival_times(
+        PoissonOpen(n_requests=30, rate_per_cycle=0.7 * cap / CLOCK_HZ, seed=2)
+    )
+    bound = [float(times[14]) + 0.5]
+    res = run_trace_segments(
+        vt, [[bw, plan[0]], [bw, plan[1]]], times, bound, seed=2,
+        engine="numpy", window=4, pad_to=8,
+    )
+    p99 = res.p99
+    n_slots = 4
+    slots = fabric_slot_plan(p99, slo_cycles=float(np.median(p99)), n_slots=n_slots)
+    assert slots.min() >= 1 and slots.max() <= n_slots
+    assert slots[int(np.argmax(p99))] <= slots[int(np.argmin(p99))]
+
+    # the granted budget drives batch formation for the worst allocation
+    lens = sample_lengths(WorkloadConfig(n_requests=32, mean_len=8.0, seed=3))
+    stats = simulate_continuous(lens, n_slots=int(slots.min()))
+    assert stats.slot_steps_used == int(lens.sum())
+
+    # slot engine honors the grant: slots >= grant are parked dormant
+    cfg, params = setup
+    grant = max(int(slots.min()), 1)
+    key = jax.random.PRNGKey(9)
+    toks = jax.random.randint(key, (n_slots, 4), 0, cfg.vocab)
+    state = init_slot_state(cfg, n_slots, max_seq=16, dtype=jnp.float32)
+    for t in range(3):
+        _, state = slot_decode_step(params, cfg, state, toks[:, t])
+    dormant = jnp.arange(n_slots) >= grant
+    state = reset_slots(state, dormant)
+    assert np.all(np.asarray(state["lens"])[grant:] == 0)  # parked
+    assert np.all(np.asarray(state["lens"])[:grant] == 3)  # untouched
+    lg, _ = slot_decode_step(params, cfg, state, toks[:, 3])
+    solo = init_slot_state(cfg, grant, max_seq=16, dtype=jnp.float32)
+    for t in range(4):
+        lg_solo, solo = slot_decode_step(params, cfg, solo, toks[:grant, t])
+    np.testing.assert_allclose(
+        np.asarray(lg[:grant]), np.asarray(lg_solo), rtol=2e-3, atol=2e-3
+    )
