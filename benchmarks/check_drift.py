@@ -21,9 +21,10 @@ also enforce the raw ``us_per_call`` timings.
 
 Some headline metrics are REQUIRED (``_REQUIRED``): the fused-DSE bench
 must always report its ``end_to_end_speedup`` AND ``analytic_speedup``
-ratios — a fused bench that silently stops reporting an acceptance number
-is a broken guard, so absence is a hard error (exit 2), not a skipped
-comparison.
+ratios, the fleet bench its ``replay_speedup``, and the fault bench its
+``availability`` ratio — a bench that silently stops reporting an
+acceptance number is a broken guard, so absence is a hard error (exit 2),
+not a skipped comparison.
 
 Rows may carry a ``configs=<n>`` field in their derived string recording
 the grid size the speedups were measured at.  When baseline and fresh
@@ -54,6 +55,7 @@ _CONFIGS = re.compile(r"\bconfigs=(\d+)\b")
 # itself is mandatory in default-glob (nightly) runs
 _REQUIRED = {
     "BENCH_dse_fused.json": ("end_to_end_speedup", "analytic_speedup"),
+    "BENCH_fabric_faults.json": ("availability",),
     "BENCH_fabric_fleet.json": ("replay_speedup",),
 }
 
@@ -93,7 +95,9 @@ def _metrics(
             keys.append("us_per_call")
             out[f"{name}.us_per_call"] = (float(row["us_per_call"]), False)
         for key, val in _SPEEDUP.findall(derived):
-            if "speedup" in key or "retention" in key:
+            # availability (fault bench) is a [0, 1] serviceable-capacity
+            # ratio — like retention, higher is better and drift guards it
+            if "speedup" in key or "retention" in key or "availability" in key:
                 keys.append(key)
                 out[f"{name}.{key}"] = (float(val), True)
         if cfg:

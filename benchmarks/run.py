@@ -1033,6 +1033,120 @@ def fabric_fleet():
         )
 
 
+def fabric_faults():
+    """Fault-tolerant fabric: spare-fraction x failure-rate sweep on VGG11.
+
+    Every point holds back part of its free-array budget as hot spares,
+    generates one seeded failure trace (per-array exponential hazards),
+    compiles it to a ``DegradePlan`` (spares re-place lost replicas,
+    reprogramming charges drift stalls), and replays Poisson traffic on the
+    segmented vtime engine.  Headline: ``availability`` (serviceable-
+    capacity fraction, REQUIRED by check_drift) at the stress corner —
+    max spare fraction under the max failure rate — plus the full
+    (spare, rate) -> (availability, p99) table in the details.
+
+    A second table ablates the event-engine ``RetryPolicy`` on a
+    zero-survivor outage (one block dead for a third of the trace):
+    infinite patience stalls requests until the repair seam, finite
+    timeouts shed them — served/shed counts and the served-p99 quantify
+    the trade.
+    """
+    import os
+
+    from repro.core.cim import allocate, simulate
+    from repro.core.cim.simulate import CLOCK_HZ, split_block_dups
+    from repro.dse import FAULT_OBJECTIVES, fault_grid, pareto_frontier, run_fault_sweep
+    from repro.fabric import (
+        FabricSim,
+        RetryPolicy,
+        TraceReplay,
+        degrade_plan_from_allocs,
+        get_telemetry,
+    )
+    from repro.fabric.dispatch import Allocation
+
+    tel = get_telemetry()
+    # overridable for smoke runs; the committed BENCH json uses the default
+    n_req = int(os.environ.get("FAULT_BENCH_REQUESTS", 600))
+
+    spares = (0.0, 0.1, 0.25)
+    rates = (1e-9, 1e-8)
+    points = fault_grid(
+        networks=("vgg11",), spare_fractions=spares, rates=rates
+    )
+    t0 = time.perf_counter()
+    res = run_fault_sweep(points, n_requests=n_req, seed=0)
+    t_sweep = time.perf_counter() - t0
+    tel.gauge("fabric.faults.bench.sweep_s", round(t_sweep, 1))
+
+    # headlines = the two stress corners at max failure rate: full spares
+    # (the availability the spares buy — the acceptance claim) and zero
+    # spares (the undefended floor, the more regression-sensitive number);
+    # both keys contain "availability" so check_drift guards both
+    stress = max(
+        range(len(points)),
+        key=lambda i: (points[i].spare_fraction, points[i].rate_per_array),
+    )
+    floor = max(
+        range(len(points)),
+        key=lambda i: (-points[i].spare_fraction, points[i].rate_per_array),
+    )
+    frontier = pareto_frontier(res, FAULT_OBJECTIVES)
+    _row(
+        "fabric_faults",
+        t_sweep * 1e6,
+        f"availability={res.availability[stress]:.4f}x;"
+        f"availability_nospare={res.availability[floor]:.4f}x;"
+        f"configs={len(points)};requests={n_req};"
+        f"p99_under_failure_ms={res.p99_cycles[stress] / CLOCK_HZ * 1e3:.3f};"
+        f"frontier_points={len(frontier)}",
+    )
+    for r in res.rows():
+        _detail(
+            "fabric_faults", f"{r['spare_fraction']:.2f}",
+            f"{r['rate_per_array']:.0e}", r["spare_arrays"],
+            f"{r['availability']:.4f}", f"{r['p50_ms']:.3f}",
+            f"{r['p99_ms']:.3f}", r["n_killed"],
+            f"{r['total_stall_cycles']:.0f}",
+        )
+
+    # ---- RetryPolicy ablation: one block loses ALL replicas for the middle
+    # third of the trace (zero survivors), then revives at the repair seam
+    spec, prof = _profile("vgg11")
+    bw = allocate(spec, prof, "blockwise", spec.min_pes() * 2)
+    cap = simulate(spec, prof, bw, n_images=64).images_per_sec
+    times = np.cumsum(
+        np.random.default_rng(0).exponential(1.0, size=n_req)
+    ) / (0.6 * cap / CLOCK_HZ)
+    flat = np.concatenate(bw.block_dups)
+    dead = flat.copy()
+    dead[0] = 0  # first block of the first layer: total outage
+    dead_alloc = Allocation(
+        bw.policy, None, split_block_dups(spec, dead),
+        bw.arrays_used, bw.arrays_total,
+    )
+    bounds = [float(times[n_req // 3]), float(times[2 * n_req // 3])]
+    plan = degrade_plan_from_allocs(
+        spec, [bw, dead_alloc, bw], bounds, horizon=float(times[-1])
+    )
+    for name, policy in (
+        ("stall_forever", RetryPolicy()),
+        ("timeout_median", RetryPolicy(timeout_cycles=(bounds[1] - bounds[0]) / 2)),
+        ("timeout_zero", RetryPolicy(timeout_cycles=0.0)),
+    ):
+        sim = FabricSim(spec, prof, bw, seed=0, failures=plan, retry=policy)
+        out = sim.run(TraceReplay(times))
+        comp = np.asarray(out.completions)
+        served = comp[~np.isnan(comp)]
+        lat = served - times[~np.isnan(comp)]
+        _detail(
+            "fabric_faults_retry", name, int(served.size),
+            int(comp.size - served.size),
+            f"{np.percentile(lat, 99) / CLOCK_HZ * 1e3:.3f}",
+        )
+        tel.count(f"fabric.faults.bench.shed_{name}", comp.size - served.size)
+
+
 # ------------------------------------------------------------- telemetry
 def telemetry():
     """Recorder overhead on the fabric_tail workload: the event engine and
@@ -1168,6 +1282,7 @@ ALL = {
     "dse": dse,
     "dse_fused": dse_fused,
     "fabric_fleet": fabric_fleet,
+    "fabric_faults": fabric_faults,
     "telemetry": telemetry,
 }
 

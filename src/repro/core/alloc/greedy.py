@@ -30,6 +30,7 @@ __all__ = [
     "erlang_c",
     "greedy_allocate",
     "greedy_allocate_batch",
+    "greedy_release",
     "greedy_batch_kernel",
     "greedy_event_schedule",
     "greedy_allocate_placed",
@@ -69,6 +70,7 @@ def greedy_allocate(
     budget: float,
     *,
     initial_replicas: np.ndarray | None = None,
+    spare_fraction: float = 0.0,
     audit=None,
 ) -> AllocationResult:
     """Grant replicas to the unit with the highest expected latency.
@@ -81,6 +83,11 @@ def greedy_allocate(
       budget: total cost available for *additional* replicas (the mandatory
         first copy of each unit is assumed already placed and not billed).
       initial_replicas: optionally start from an existing allocation.
+      spare_fraction: fraction of ``budget`` withheld from the loop as a hot
+        spare pool (fault tolerance: ``fabric.failures.degrade_plan`` spends
+        it re-placing lost replicas).  The reserve is never granted here and
+        comes back in ``leftover``.  0.0 (the default) is bit-identical to
+        the original allocator.
       audit: optional ``repro.obs.AllocationAudit`` receiving one entry per
         grant (and one for the stopping rule) — the decision log.  ``None``
         leaves the loop untouched.
@@ -88,6 +95,9 @@ def greedy_allocate(
     Stops when the current slowest unit can no longer be afforded, mirroring
     the paper's stopping rule.
     """
+    if not 0.0 <= spare_fraction <= 1.0:
+        raise ValueError(f"spare_fraction must be in [0, 1], got {spare_fraction}")
+    reserve = float(budget) * spare_fraction
     base_latency = np.asarray(base_latency, dtype=np.float64)
     unit_cost = np.asarray(unit_cost, dtype=np.float64)
     if base_latency.shape != unit_cost.shape:
@@ -101,7 +111,7 @@ def greedy_allocate(
         else np.asarray(initial_replicas, dtype=np.int64).copy()
     )
     if n == 0:
-        return AllocationResult(replicas, base_latency.copy(), 0.0, budget)
+        return AllocationResult(replicas, base_latency.copy(), 0.0, float(budget))
     if np.any(replicas < 1):
         raise ValueError("every unit needs at least one replica")
 
@@ -109,7 +119,7 @@ def greedy_allocate(
     heap = [(-base_latency[i] / replicas[i], i) for i in range(n)]
     heapq.heapify(heap)
     spent = 0.0
-    remaining = float(budget)
+    remaining = float(budget) - reserve
     while heap:
         neg_lat, i = heapq.heappop(heap)
         if unit_cost[i] > remaining:
@@ -129,7 +139,66 @@ def greedy_allocate(
         heapq.heappush(heap, (-new_lat, i))
 
     latency = base_latency / replicas
-    return AllocationResult(replicas, latency, spent, remaining)
+    return AllocationResult(replicas, latency, spent, remaining + reserve)
+
+
+def greedy_release(
+    base_latency: np.ndarray,
+    unit_cost: np.ndarray,
+    release: float,
+    *,
+    replicas: np.ndarray,
+) -> AllocationResult:
+    """Reverse greedy: free at least ``release`` cost from ``replicas``.
+
+    The exact inverse of ``greedy_allocate``'s grant rule: repeatedly remove
+    one replica from the unit whose latency grows the LEAST by losing it —
+    the unit with the smallest ``base_i / (r_i - 1)`` among those with more
+    than one replica (ties to the lower index, mirroring the grant heap).
+    Used by segmented replay (``fleet.segment_growth_plan``) when a seam's
+    budget shrinks — degraded capacity after failures.  Stops once the freed
+    cost reaches ``release`` or every unit is down to its mandatory copy.
+
+    Returns an ``AllocationResult`` whose ``spent`` is the (negative) freed
+    cost — so warm-started callers can keep one running budget across grow
+    and shrink seams; ``leftover`` is the overshoot past ``release`` (>= 0,
+    replicas free whole cost units).
+    """
+    base_latency = np.asarray(base_latency, dtype=np.float64)
+    unit_cost = np.asarray(unit_cost, dtype=np.float64)
+    if base_latency.shape != unit_cost.shape:
+        raise ValueError(
+            f"base_latency {base_latency.shape} vs unit_cost {unit_cost.shape}"
+        )
+    replicas = np.asarray(replicas, dtype=np.int64).copy()
+    if replicas.shape != base_latency.shape:
+        raise ValueError(
+            f"replicas {replicas.shape} vs base_latency {base_latency.shape}"
+        )
+    if np.any(replicas < 1):
+        raise ValueError("every unit needs at least one replica")
+    if release < 0:
+        raise ValueError(f"release must be >= 0, got {release}")
+
+    # Min-heap keyed by the latency each unit would have after losing one
+    # replica; stale entries are detected by re-deriving the key.
+    heap = [
+        (base_latency[i] / (replicas[i] - 1), i)
+        for i in range(base_latency.size)
+        if replicas[i] > 1
+    ]
+    heapq.heapify(heap)
+    freed = 0.0
+    while heap and freed < release:
+        lat, i = heapq.heappop(heap)
+        if replicas[i] <= 1 or lat != base_latency[i] / (replicas[i] - 1):
+            continue
+        replicas[i] -= 1
+        freed += unit_cost[i]
+        if replicas[i] > 1:
+            heapq.heappush(heap, (base_latency[i] / (replicas[i] - 1), i))
+    latency = base_latency / replicas
+    return AllocationResult(replicas, latency, -freed, max(freed - release, 0.0))
 
 
 @dataclass(frozen=True)

@@ -118,6 +118,18 @@ class FabricTopology:
     def total_arrays(self) -> int:
         return self.n_chips * self.arrays_per_chip
 
+    def spares_per_chip(self, spare_fraction: float) -> int:
+        """Arrays to hold back as hot spares on EACH chip for fault
+        tolerance: ``floor(arrays_per_chip * spare_fraction)``.  Spares are
+        budgeted per chip, not fabric-wide, because a chip-correlated
+        failure domain (``fabric.failures`` bursts) takes its own spares
+        down with it — cross-chip spares are what survive."""
+        if not 0.0 <= spare_fraction <= 1.0:
+            raise ValueError(
+                f"spare_fraction must be in [0, 1], got {spare_fraction}"
+            )
+        return int(self.arrays_per_chip * spare_fraction)
+
     # ------------------------------------------------------------ cost model
     @property
     def link_bytes_per_cycle(self) -> float:

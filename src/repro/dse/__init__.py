@@ -7,10 +7,13 @@ arrays-vs-throughput-vs-utilization Pareto frontier.  With a ``FabricEval``
 attached, every swept design additionally runs the batched virtual-time
 fabric at its own operating load, so frontiers can rank on
 (throughput, p99 tail latency, utilization) instead of throughput alone
-(``LATENCY_OBJECTIVES``).
+(``LATENCY_OBJECTIVES``).  ``run_fault_sweep`` adds the robustness axis:
+spare fraction x failure rate replayed under seeded failure traces into an
+(availability, p99-under-failure, arrays) frontier (``FAULT_OBJECTIVES``).
 """
 
 from .engine import AllocationBatch, allocate_batch, run_batch, to_allocation
+from .faults import FaultPoint, FaultSweepResult, fault_grid, run_fault_sweep
 from .fused import (
     FusedChipSweepResult,
     FusedPipeline,
@@ -21,6 +24,7 @@ from .fused import (
 )
 from .pareto import (
     DEFAULT_OBJECTIVES,
+    FAULT_OBJECTIVES,
     LATENCY_OBJECTIVES,
     MULTICHIP_OBJECTIVES,
     pareto_frontier,
@@ -46,6 +50,10 @@ __all__ = [
     "allocate_batch",
     "run_batch",
     "to_allocation",
+    "FaultPoint",
+    "FaultSweepResult",
+    "fault_grid",
+    "run_fault_sweep",
     "FusedChipSweepResult",
     "FusedPipeline",
     "clear_fused_caches",
@@ -53,6 +61,7 @@ __all__ = [
     "run_fused_multichip_sweep",
     "run_fused_sweep",
     "DEFAULT_OBJECTIVES",
+    "FAULT_OBJECTIVES",
     "LATENCY_OBJECTIVES",
     "MULTICHIP_OBJECTIVES",
     "pareto_frontier",

@@ -16,6 +16,7 @@ __all__ = [
     "pareto_mask",
     "pareto_frontier",
     "DEFAULT_OBJECTIVES",
+    "FAULT_OBJECTIVES",
     "LATENCY_OBJECTIVES",
     "MULTICHIP_OBJECTIVES",
 ]
@@ -43,6 +44,16 @@ MULTICHIP_OBJECTIVES = (
     ("images_per_sec", True),
     ("p99_cycles", False),
     ("n_chips", False),
+)
+
+# fault-tolerance frontier over ``run_fault_sweep`` results: capacity that
+# stays serviceable through failures (spares buy it), the tail users feel
+# while degraded, and the arrays you must build (spares cost them) — the
+# spare-fraction x failure-rate trade of the robustness PR
+FAULT_OBJECTIVES = (
+    ("availability", True),
+    ("p99_cycles", False),
+    ("arrays_total", False),
 )
 
 

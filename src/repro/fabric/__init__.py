@@ -20,6 +20,15 @@ Fleet-scale replay lives in ``fleet``: a streaming variant of the kernel
 memory stays O(lanes) at million-request traces), plus segmented trace
 replay that re-allocates at control-interval boundaries with warm-started
 ``greedy_allocate`` and charges array-reprogramming stalls in-kernel.
+
+Fault tolerance lives in ``failures``: seeded per-array Weibull hazards
+with chip-correlated burst domains and optional repair, compiled
+(``degrade_plan``) into a segment trajectory BOTH engines replay
+bit-identically — ``FabricSim(failures=plan)`` on the event calendar,
+``run_trace_failures`` on the segmented vtime kernel — with spare-pool
+re-placement, reprogramming stalls, and an availability metric; a
+``RetryPolicy`` governs event-engine request shedding on zero-survivor
+blocks.
 """
 
 from .arrivals import (
@@ -33,11 +42,24 @@ from .arrivals import (
 from .dispatch import FabricSim
 from .drift import DriftConfig, OnlineReallocator, shift_profile
 from .events import EventCalendar, PoolStats, ServerPool
+from .failures import (
+    DegradePlan,
+    FailureEvent,
+    FailureTrace,
+    RetryPolicy,
+    degrade_plan,
+    degrade_plan_from_allocs,
+    failure_step_schedule,
+    generate_failure_events,
+    generate_failure_trace,
+    lane_chips,
+)
 from .fleet import (
     FleetResult,
     SegmentedReplayResult,
     SegmentReport,
     run_stream,
+    run_trace_failures,
     run_trace_segments,
     segment_growth_plan,
 )
@@ -86,8 +108,19 @@ __all__ = [
     "SegmentReport",
     "SegmentedReplayResult",
     "run_stream",
+    "run_trace_failures",
     "run_trace_segments",
     "segment_growth_plan",
+    "DegradePlan",
+    "FailureEvent",
+    "FailureTrace",
+    "RetryPolicy",
+    "degrade_plan",
+    "degrade_plan_from_allocs",
+    "failure_step_schedule",
+    "generate_failure_events",
+    "generate_failure_trace",
+    "lane_chips",
     "FabricSim",
     "DriftConfig",
     "OnlineReallocator",

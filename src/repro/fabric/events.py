@@ -227,6 +227,33 @@ class ServerPool:
         if self.stats is not None:
             self.stats.server_busy.extend([0.0] * int(extra))
 
+    def kill(self, k: int, t: float) -> int:
+        """Remove the ``k`` LATEST-free replicas at time ``t`` (failures).
+
+        Killing the largest free-times is the multiset rule the packed
+        virtual-time kernel implements by setting the top sorted lane
+        positions to ``+inf`` (``fleet._apply_boundary``) — both engines
+        must retire the same lanes for bit-identity to hold.  Jobs already
+        dispatched to a killed lane DRAIN (their completion was fixed at
+        dispatch; no preemption in either engine) — the return value counts
+        how many killed lanes were still busy at ``t``, i.e. carried work a
+        live fabric would have had to retry on survivors.  ``kill`` may
+        empty the pool; dispatching on an empty pool is the caller's
+        responsibility to prevent (``FabricSim`` parks a phantom lane)."""
+        k = int(k)
+        if k > len(self.avail):
+            raise ValueError(f"cannot kill {k} of {len(self.avail)} servers")
+        busy = 0
+        for _ in range(k):
+            i = max(range(len(self.avail)), key=self.avail.__getitem__)
+            if self.avail[i] > t:
+                busy += 1
+            self.avail.pop(i)
+            if self.stats is not None:
+                self.stats.server_busy.pop(i)
+        self._online.append((float(t), -k))
+        return busy
+
     def capacity_cycles(self, horizon: float) -> float:
         """Array-cycles of capacity over [0, horizon], counting replicas
         added mid-run only from the moment they came online."""

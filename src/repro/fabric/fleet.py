@@ -18,15 +18,22 @@ Three pieces, composable and individually pinned:
     against the numpy replay of the same kernel.
   * ``run_trace_segments``: splits a long trace at control-interval
     boundaries, carries free-lane state across segments, and applies a
-    per-segment (growth-only) allocation, charging the event engine's
+    per-segment allocation (growth or shrink), charging the event engine's
     reprogramming semantics at each boundary: every lane of a reshaped
-    config freezes until ``boundary + DriftConfig.stall(arrays_added)`` and
-    the new lanes come online then — exactly ``FabricSim.apply_growth``.
-    With no allocation change and zero stall the segmented replay is
-    bit-identical to the unsegmented run (pinned in tests).
+    config freezes until ``boundary + DriftConfig.stall(arrays_added)``
+    (net-new replicas only) and the new lanes come online then — exactly
+    ``FabricSim.apply_growth``; shrunk lanes go to ``+inf`` (absent), which
+    is how seeded failure traces replay on this engine.  With no allocation
+    change and zero stall the segmented replay is bit-identical to the
+    unsegmented run (pinned in tests).
   * ``segment_growth_plan``: builds such a trajectory from per-boundary
-    array budgets via ``greedy_allocate(initial_replicas=...)`` — the
-    warm-start hook the future autoscaling controller drives.
+    array budgets (negative = degraded capacity, via ``greedy_release``)
+    through ``greedy_allocate(initial_replicas=...)`` — the warm-start hook
+    the autoscaling controller drives.
+  * ``run_trace_failures``: the fault-tolerance entry — compiles a seeded
+    ``fabric.failures.FailureTrace`` into a ``DegradePlan`` and replays it
+    here, bit-identical to ``FabricSim(failures=plan)`` (the cross-engine
+    contract pinned in tests/test_failures.py).
 
 ``CoarsenConfig`` (from ``vtime``) optionally trades ~0.3-2% pessimistic
 tail bias for the 2.7-3.2x macro-job speedup on top; every default is the
@@ -79,6 +86,7 @@ __all__ = [
     "SegmentReport",
     "SegmentedReplayResult",
     "run_stream",
+    "run_trace_failures",
     "run_trace_segments",
     "segment_growth_plan",
 ]
@@ -480,13 +488,16 @@ def segment_growth_plan(
     *,
     zskip: bool | None = None,
 ) -> list[Allocation]:
-    """Growth-only allocation trajectory for ``run_trace_segments``: at each
-    control boundary grant ``budgets[s]`` additional arrays to the blocks
-    with the highest expected drain time, warm-started from the previous
-    segment's replicas via ``greedy_allocate(initial_replicas=...)`` — the
-    controller hook named in the ROADMAP.  Returns ``len(budgets) + 1``
-    allocations (the input first)."""
-    from ..core.alloc.greedy import greedy_allocate
+    """Allocation trajectory for ``run_trace_segments``: at each control
+    boundary grant ``budgets[s]`` additional arrays to the blocks with the
+    highest expected drain time, warm-started from the previous segment's
+    replicas via ``greedy_allocate(initial_replicas=...)`` — the controller
+    hook named in the ROADMAP.  A NEGATIVE budget shrinks instead (degraded
+    capacity after a failure): ``greedy_release`` frees at least ``-b``
+    arrays from the blocks whose latency suffers least, the exact inverse
+    of the grant rule.  Returns ``len(budgets) + 1`` allocations (the input
+    first)."""
+    from ..core.alloc.greedy import greedy_allocate, greedy_release
 
     if alloc.block_dups is None:
         raise ValueError("segment_growth_plan requires a block-wise allocation")
@@ -500,7 +511,10 @@ def segment_growth_plan(
     used, total = int(alloc.arrays_used), int(alloc.arrays_total)
     out = [alloc]
     for b in budgets:
-        res = greedy_allocate(base_lat, cost, float(b), initial_replicas=cur)
+        if float(b) < 0:
+            res = greedy_release(base_lat, cost, -float(b), replicas=cur)
+        else:
+            res = greedy_allocate(base_lat, cost, float(b), initial_replicas=cur)
         cur = res.replicas
         used += int(round(res.spent))
         out.append(
@@ -544,11 +558,16 @@ def _segment_pack(vt: VirtualTimeFabric, segs):
 
 
 def _apply_boundary(frees, dups_old, dups_new, arrays_added, t_free):
-    """Event-engine growth semantics on packed lanes: for configs that
-    reprogram (``arrays_added > 0``) every existing lane freezes until
-    ``t_free`` (= boundary + stall) and the grown lanes come online at
-    ``t_free`` — exactly ``FabricSim.apply_growth``.  Unchanged configs pass
-    through untouched (a zero-growth boundary is a no-op)."""
+    """Event-engine seam semantics on packed lanes: for configs that
+    reprogram (``arrays_added > 0``, positive dup diffs only) every existing
+    lane freezes until ``t_free`` (= boundary + stall) and the grown lanes
+    come online at ``t_free`` — exactly ``FabricSim.apply_growth``.  Blocks
+    that SHRINK (failures: survivors < previous replicas) lose their
+    latest-free lanes — sorted positions ``[dups_new, dups_old)`` hold the
+    largest finite free-times, and setting them to ``+inf`` is the existing
+    absent-server convention; ``ServerPool.kill`` removes the same multiset
+    on the event side.  Unchanged configs pass through untouched (a
+    zero-change boundary is a no-op)."""
     hit = arrays_added > 0
     out = []
     for li, f in enumerate(frees):
@@ -558,6 +577,8 @@ def _apply_boundary(frees, dups_old, dups_new, arrays_added, t_free):
         d = np.arange(lanes.shape[-1])
         grow = (d >= dups_old[li][:, :, None]) & (d < dups_new[li][:, :, None])
         lanes = np.where(grow, t_free[:, None, None], lanes)
+        dead = (d >= dups_new[li][:, :, None]) & (d < dups_old[li][:, :, None])
+        lanes = np.where(dead, np.inf, lanes)
         out.append(np.sort(lanes, axis=-1))
     return tuple(out)
 
@@ -582,9 +603,14 @@ def run_trace_segments(
 
     The trace is split at ``boundaries`` (cycles, nondecreasing); segment
     ``s`` runs under ``allocs_by_segment[s]`` (one ``Allocation`` or a
-    C-list per segment; growth-only across segments), with free-lane state
-    carried across boundaries and each config's reprogramming stall —
-    ``drift.stall(arrays_added)`` — charged to every lane at entry.
+    C-list per segment), with free-lane state carried across boundaries and
+    each config's reprogramming stall — ``drift.stall(arrays_added)``, from
+    net-NEW replicas only — charged to every lane at entry.  Allocations may
+    grow or shrink at a seam: shrinking a block kills its latest-free lanes
+    (``+inf``, the absent-server convention), which is how seeded failure
+    traces replay here (``fabric.failures.degrade_plan`` /
+    ``run_trace_failures``); a shrink-to-identical plan stays bit-identical
+    to the unsegmented replay.
 
     ``stream=True`` (default) keeps sketch + lane state in-carry and pads
     segments to ``pad_to`` requests so all segments share compiled kernels;
@@ -638,13 +664,10 @@ def run_trace_segments(
     for s in range(1, n_seg):
         for li in range(n_layers):
             diff = dups[s][li] - dups[s - 1][li]  # (C, B)
-            if np.any(diff < 0):
-                bad = int(np.argmax(np.any(diff < 0, axis=1)))
-                raise ValueError(
-                    f"segmented replay is growth-only: config {bad} shrinks "
-                    f"layer {li} entering segment {s}"
-                )
-            added[s] += diff.sum(axis=1) * widths[li]
+            # positive diffs only: shrunk lanes (failures) lose their
+            # replica without reprogramming anything, so only net-new
+            # replicas charge the drift stall
+            added[s] += np.maximum(diff, 0).sum(axis=1) * widths[li]
     stalls = np.zeros((n_seg, c_total))
     for s in range(1, n_seg):
         stalls[s] = [
@@ -744,4 +767,39 @@ def run_trace_segments(
     return SegmentedReplayResult(
         sketches, tuple(percentiles), reports, makespan, int(n), vt.clock_hz,
         arrivals=arrivals, completions=completions,
+    )
+
+
+def run_trace_failures(
+    vt: VirtualTimeFabric,
+    prof: NetworkProfile,
+    alloc: Allocation,
+    proc: ArrivalProcess | np.ndarray,
+    failures,
+    *,
+    spare_arrays: float = 0.0,
+    drift: DriftConfig = DriftConfig(),
+    min_survivors: int = 1,
+    **kwargs,
+) -> SegmentedReplayResult:
+    """Replay one trace under a seeded failure trace on the vtime engine.
+
+    ``failures`` is a ``fabric.failures.FailureTrace`` (compiled to a
+    ``DegradePlan`` here) or an already-built ``DegradePlan``.  Thin sugar
+    over ``degrade_plan`` + ``run_trace_segments``: every failure/repair
+    time becomes a segment seam, survivors are re-placed from the
+    ``spare_arrays`` hot pool via warm-started greedy, and reprogramming
+    stalls are charged in-kernel.  ``FabricSim(failures=plan)`` replays the
+    same plan bit-identically (the cross-engine contract)."""
+    from .failures import FailureTrace, degrade_plan
+
+    if isinstance(failures, FailureTrace):
+        plan = degrade_plan(
+            vt.spec, prof, alloc, failures,
+            spare_arrays=spare_arrays, drift=drift, min_survivors=min_survivors,
+        )
+    else:
+        plan = failures
+    return run_trace_segments(
+        vt, list(plan.allocs), proc, plan.boundaries, drift=plan.drift, **kwargs
     )

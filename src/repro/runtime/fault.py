@@ -70,6 +70,31 @@ class FaultInjector:
             self.fail_budget[step] -= 1
             raise RuntimeError(f"injected failure at step {step}")
 
+    @classmethod
+    def from_trace(
+        cls,
+        trace,
+        cycles_per_step: float,
+        *,
+        slow_at: dict[int, float] | None = None,
+        sleep: Callable[[float], None] | None = None,
+    ) -> "FaultInjector":
+        """Drive the training-side injector from a fabric failure trace.
+
+        ``trace`` is a ``fabric.failures.FailureTrace``; each array failure
+        lands on training step ``floor(time / cycles_per_step)``, so the
+        training runner and the fabric engines exercise one seeded failure
+        schedule (the shared-generator contract of the fault-tolerance PR).
+        """
+        # local import: runtime stays importable without the fabric package
+        from ..fabric.failures import failure_step_schedule
+
+        return cls(
+            fail_at=failure_step_schedule(trace, cycles_per_step),
+            slow_at=slow_at,
+            sleep=sleep,
+        )
+
 
 class TrainRunner:
     def __init__(

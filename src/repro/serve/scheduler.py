@@ -16,6 +16,14 @@ replay (``fabric.fleet``) reports per-allocation tail latency for a day of
 traffic, and the slot plan scales each allocation's decode batch so the
 fabric stays inside its latency SLO — slots above the plan sit dormant
 (``reset_slots``) until a re-allocation earns them back.
+
+``brownout_plan`` is the failure-mode counterpart (``fabric.failures``):
+when arrays die and post-failure capacity cannot meet the p99 SLO at the
+offered load, it computes the admission fraction that sheds just enough
+load to keep the queues from diverging — a degraded-but-bounded brownout
+instead of an unbounded blackout.  Shedding trades throughput for tail
+latency by construction; the EXPERIMENTS.md fault section quantifies the
+loss.
 """
 
 from __future__ import annotations
@@ -26,6 +34,7 @@ import numpy as np
 
 __all__ = [
     "WorkloadConfig",
+    "brownout_plan",
     "fabric_slot_plan",
     "sample_lengths",
     "simulate_static",
@@ -75,6 +84,48 @@ def fabric_slot_plan(
     p99 = np.asarray(p99_cycles, dtype=np.float64)
     frac = np.where(p99 > 0, np.minimum(slo_cycles / np.maximum(p99, 1e-300), 1.0), 1.0)
     return np.clip(np.floor(n_slots * frac), min_slots, n_slots).astype(np.int64)
+
+
+def brownout_plan(
+    offered_rps,
+    capacity_rps,
+    p99_cycles,
+    slo_cycles: float,
+    min_admit_frac: float = 0.05,
+) -> np.ndarray:
+    """Admission fraction under degraded capacity (graceful brownout).
+
+    Two first-order pressure signals, take the tighter:
+
+      * stability — admitting more than ``capacity_rps`` makes queues grow
+        without bound, so cap admission at ``capacity / offered``;
+      * tail SLO — replayed p99 scales roughly with admitted load near
+        saturation, so scale admission by ``slo / p99`` when the measured
+        p99 already exceeds the SLO.
+
+    Vectorized over allocations like ``fabric_slot_plan``; no traffic
+    (``offered_rps == 0``) or no latency signal (``p99 == 0``) admits 1.0.
+    ``min_admit_frac`` keeps a trickle flowing even under extreme loss so
+    recovery is observable (and no tenant is fully blacked out).  Returns
+    the fraction of offered load to admit, in ``[min_admit_frac, 1]`` —
+    shedding loses throughput by construction; it buys bounded queues and a
+    defended p99.
+    """
+    if not slo_cycles > 0:
+        raise ValueError(f"slo_cycles must be positive, got {slo_cycles}")
+    if not 0.0 < min_admit_frac <= 1.0:
+        raise ValueError(
+            f"min_admit_frac must be in (0, 1], got {min_admit_frac}"
+        )
+    offered = np.asarray(offered_rps, dtype=np.float64)
+    cap = np.asarray(capacity_rps, dtype=np.float64)
+    p99 = np.asarray(p99_cycles, dtype=np.float64)
+    if np.any(offered < 0) or np.any(cap < 0):
+        raise ValueError("offered_rps and capacity_rps must be nonnegative")
+    stab = np.where(offered > 0, cap / np.maximum(offered, 1e-300), np.inf)
+    tail = np.where(p99 > 0, slo_cycles / np.maximum(p99, 1e-300), np.inf)
+    frac = np.minimum(np.minimum(stab, tail), 1.0)
+    return np.clip(frac, min_admit_frac, 1.0)
 
 
 @dataclass(frozen=True)

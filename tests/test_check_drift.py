@@ -185,9 +185,47 @@ def test_fleet_replay_speedup_satisfied(tmp_path):
     assert r.returncode == 0, r.stderr
 
 
-def test_fleet_bench_file_required_in_default_glob(tmp_path):
-    """The nightly default glob must refuse to run without the committed
-    fleet bench file (same contract as BENCH_dse_fused.json)."""
+def _faults_doc(derived="availability=0.99x;availability_nospare=0.94x;configs=6"):
+    return {
+        "mode": "fabric_faults",
+        "rows": [
+            {"name": "fabric_faults", "us_per_call": 1.0, "derived": derived}
+        ],
+    }
+
+
+def test_fault_availability_required(tmp_path):
+    """BENCH_fabric_faults.json without its availability headline is a
+    broken guard — exit 2 naming the key, not a silent pass."""
+    (tmp_path / "BENCH_fabric_faults.json").write_text(
+        json.dumps(_faults_doc(derived="configs=6;requests=2000"))
+    )
+    r = _run("--root", str(tmp_path), "fabric_faults")
+    assert r.returncode == 2
+    assert "availability" in r.stderr
+    assert "Traceback" not in r.stderr
+
+
+def test_fault_availability_satisfied_and_guarded(tmp_path, monkeypatch, capsys):
+    """availability parses as a higher-is-better ratio: a drop beyond the
+    tolerance regresses the default (no --strict-timing) check."""
+    cd = _load_check_drift()
+    (tmp_path / "BENCH_fabric_faults.json").write_text(
+        json.dumps(_faults_doc("availability=0.80x;configs=6"))
+    )
+    monkeypatch.setattr(
+        cd, "_baseline", lambda ref, name: _faults_doc("availability=1.00x;configs=6")
+    )
+    rc = cd.main(["--root", str(tmp_path), "fabric_faults"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "FAIL" in out and "availability" in out
+
+
+def test_required_bench_files_in_default_glob(tmp_path):
+    """The nightly default glob must refuse to run without EVERY committed
+    required bench file (dse_fused, fabric_faults, fabric_fleet) — and the
+    error names the first one missing in sorted order."""
     doc = {
         "mode": "dse_fused",
         "rows": [
@@ -199,6 +237,11 @@ def test_fleet_bench_file_required_in_default_glob(tmp_path):
         ],
     }
     (tmp_path / "BENCH_dse_fused.json").write_text(json.dumps(doc))
+    r = _run("--root", str(tmp_path))
+    assert r.returncode == 2
+    assert "BENCH_fabric_faults.json" in r.stderr
+    # with the faults file present the glob must next demand the fleet file
+    (tmp_path / "BENCH_fabric_faults.json").write_text(json.dumps(_faults_doc()))
     r = _run("--root", str(tmp_path))
     assert r.returncode == 2
     assert "BENCH_fabric_fleet.json" in r.stderr

@@ -1,0 +1,132 @@
+"""Property tests for the seeded failure-trace generator.
+
+Hypothesis drives random fabric shapes and hazard parameters through
+``generate_failure_events`` and checks the structural invariants every
+consumer (degrade_plan, FabricSim seams, FaultInjector bridge) relies on:
+chronological order, per-lane fail/repair alternation with repairs strictly
+after their failures, the ``min_survivors`` floor, chip-burst domain
+containment, and bit-exact seeded determinism.
+
+The dev extra installs hypothesis; the tier1-minimal CI env does not, so
+the whole module skips there.
+"""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.fabric import generate_failure_events, lane_chips  # noqa: E402
+
+
+def _shapes():
+    n = st.integers(min_value=1, max_value=5)
+    return n.flatmap(
+        lambda k: st.tuples(
+            st.lists(st.integers(1, 6), min_size=k, max_size=k),
+            st.lists(st.sampled_from([1, 2, 4, 8]), min_size=k, max_size=k),
+        )
+    )
+
+
+_PARAMS = dict(
+    shape=_shapes(),
+    seed=st.integers(0, 2**32 - 1),
+    rate=st.floats(1e-7, 1e-4),
+    repair=st.one_of(st.none(), st.floats(1e3, 1e5)),
+    burst=st.floats(0.0, 1e-5),
+)
+
+
+@settings(max_examples=30, deadline=None)
+@given(**_PARAMS)
+def test_trace_invariants(shape, seed, rate, repair, burst):
+    dups, widths = np.asarray(shape[0]), np.asarray(shape[1])
+    horizon = 1e6
+    events = generate_failure_events(
+        dups, widths, horizon=horizon, seed=seed, rate_per_array=rate,
+        repair_cycles=repair, arrays_per_chip=16, chip_burst_rate=burst,
+    )
+
+    # chronological, inside the horizon
+    times = [e.time for e in events]
+    assert times == sorted(times)
+    assert all(0.0 < t < horizon for t in times)
+
+    # per-(unit, lane): strictly increasing times, alternation starting with
+    # a failure, repairs strictly after (never coincident with) the failure
+    per_lane: dict = {}
+    for e in events:
+        key = (e.unit, e.lane)
+        hist = per_lane.setdefault(key, [])
+        if hist:
+            assert e.time > hist[-1][0]
+        hist.append((e.time, e.repair))
+    for hist in per_lane.values():
+        for i, (_, is_repair) in enumerate(hist):
+            assert is_repair == (i % 2 == 1)
+
+    # the min_survivors floor holds at every instant
+    alive = dups.astype(np.int64).copy()
+    for e in events:
+        alive[e.unit] += 1 if e.repair else -1
+        assert alive[e.unit] >= 1
+
+    # chip homes are consistent with linear array packing
+    chips = lane_chips(dups, widths, arrays_per_chip=16)
+    for e in events:
+        if e.lane < dups[e.unit]:  # repaired lanes may exceed original dups
+            assert e.chip == int(chips[e.unit][e.lane])
+
+
+@settings(max_examples=15, deadline=None)
+@given(**_PARAMS)
+def test_seeded_determinism(shape, seed, rate, repair, burst):
+    dups, widths = np.asarray(shape[0]), np.asarray(shape[1])
+    kw = dict(
+        horizon=1e6, seed=seed, rate_per_array=rate, repair_cycles=repair,
+        arrays_per_chip=16, chip_burst_rate=burst,
+    )
+    assert generate_failure_events(dups, widths, **kw) == generate_failure_events(
+        dups, widths, **kw
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    shape=_shapes(),
+    seed=st.integers(0, 2**32 - 1),
+    burst=st.floats(1e-6, 1e-4),
+    frac=st.floats(0.1, 1.0),
+)
+def test_chip_burst_domain_containment(shape, seed, burst, frac):
+    """Every lane a burst kills at one timestamp lives on the bursting chip
+    — correlated failures stay inside their failure domain."""
+    dups, widths = np.asarray(shape[0]), np.asarray(shape[1])
+    events = generate_failure_events(
+        dups, widths, horizon=1e6, seed=seed, rate_per_array=0.0,
+        arrays_per_chip=8, chip_burst_rate=burst, burst_kill_frac=frac,
+    )
+    chips = lane_chips(dups, widths, arrays_per_chip=8)
+    by_time: dict = {}
+    for e in events:
+        assert not e.repair
+        by_time.setdefault(e.time, []).append(e)
+    for group in by_time.values():
+        domain = {e.chip for e in group}
+        assert len(domain) == 1  # one burst = one chip
+        for e in group:
+            assert int(chips[e.unit][e.lane]) == e.chip
+
+
+@settings(max_examples=15, deadline=None)
+@given(shape=_shapes(), seed=st.integers(0, 2**32 - 1))
+def test_zero_rates_empty_trace(shape, seed):
+    dups, widths = np.asarray(shape[0]), np.asarray(shape[1])
+    assert (
+        generate_failure_events(
+            dups, widths, horizon=1e6, seed=seed, rate_per_array=0.0
+        )
+        == ()
+    )

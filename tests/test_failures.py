@@ -1,0 +1,432 @@
+"""Fault-tolerant fabric: trace generation, degrade plans, both engines.
+
+The correctness spine is the cross-engine contract: one seeded
+``FailureTrace`` compiled to a ``DegradePlan`` replays BIT-identically on
+the event calendar (``FabricSim(failures=plan)``) and the segmented vtime
+kernel (``run_trace_segments`` / ``run_trace_failures``) — pinned here on
+VGG11 and ResNet18 with numpy and jax loop shapes.  Around it: generator
+determinism and floors, spare-pool re-placement accounting, zero-survivor
+retry/shedding (event engine only, outside the identity contract),
+brownout admission, the allocator's spare holdback/release, and the
+spare-fraction x failure-rate DSE sweep feeding ``FAULT_OBJECTIVES``.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.cim import allocate, simulate
+from repro.core.cim.simulate import CLOCK_HZ, split_block_dups
+from repro.fabric import (
+    DriftConfig,
+    FabricSim,
+    FailureTrace,
+    RetryPolicy,
+    TraceReplay,
+    VirtualTimeFabric,
+    degrade_plan,
+    degrade_plan_from_allocs,
+    failure_step_schedule,
+    generate_failure_events,
+    generate_failure_trace,
+    lane_chips,
+    run_trace_failures,
+    run_trace_segments,
+)
+from repro.fabric.dispatch import Allocation
+
+
+@pytest.fixture(scope="module")
+def vgg(profiled):
+    return profiled("vgg11", n_images=1, sample_patches=64)
+
+
+@pytest.fixture(scope="module")
+def setup(vgg):
+    spec, prof = vgg
+    bw = allocate(spec, prof, "blockwise", spec.min_pes() * 2)
+    cap = simulate(spec, prof, bw, n_images=64).images_per_sec
+    vt = VirtualTimeFabric(spec, prof)
+    return spec, prof, bw, cap, vt
+
+
+def _times(cap, n=60, frac=0.6, seed=7):
+    gaps = np.random.default_rng(seed).exponential(1.0, size=n)
+    return np.cumsum(gaps) / (frac * cap / CLOCK_HZ)
+
+
+# ------------------------------------------------------------- generator
+def test_generator_deterministic_and_sorted():
+    dups = np.array([3, 2, 4])
+    widths = np.array([2, 8, 1])
+    kw = dict(
+        horizon=1e6, seed=11, rate_per_array=2e-5, repair_cycles=2e5,
+        arrays_per_chip=8, chip_burst_rate=1e-6,
+    )
+    a = generate_failure_events(dups, widths, **kw)
+    b = generate_failure_events(dups, widths, **kw)
+    assert a == b
+    c = generate_failure_events(dups, widths, **{**kw, "seed": 12})
+    assert a != c
+    times = [e.time for e in a]
+    assert times == sorted(times)
+    assert all(0.0 < e.time < 1e6 for e in a)
+
+
+def test_generator_min_survivors_floor():
+    dups = np.array([2, 3])
+    widths = np.array([4, 4])
+    ev = generate_failure_events(
+        dups, widths, horizon=1e7, seed=0, rate_per_array=1e-4
+    )
+    alive = dups.astype(np.int64).copy()
+    for e in ev:
+        alive[e.unit] += 1 if e.repair else -1
+        assert alive[e.unit] >= 1  # the default floor
+    # a zero floor may drain units completely
+    ev0 = generate_failure_events(
+        dups, widths, horizon=1e7, seed=0, rate_per_array=1e-4, min_survivors=0
+    )
+    assert sum(not e.repair for e in ev0) >= sum(not e.repair for e in ev)
+
+
+def test_lane_chips_linear_packing():
+    chips = lane_chips(np.array([2, 3, 1]), np.array([4, 2, 8]), arrays_per_chip=8)
+    assert [c.tolist() for c in chips] == [[0, 0], [1, 1, 1], [1]]
+
+
+def _ev(time, unit, lane, repair=False, chip=0):
+    from repro.fabric import FailureEvent
+
+    return FailureEvent(time, unit, lane, repair, chip)
+
+
+def test_trace_mttr_and_step_schedule():
+    t = FailureTrace(
+        (
+            _ev(100.0, 0, 0), _ev(300.0, 0, 0, repair=True),
+            _ev(500.0, 1, 1), _ev(900.0, 1, 1, repair=True),
+        ),
+        horizon=1000.0, seed=0, n_units=2,
+    )
+    assert t.mttr() == 300.0
+    assert t.n_failures == 2 and t.n_repairs == 2
+    sched = failure_step_schedule(t, cycles_per_step=250.0)
+    assert sched == {0: 1, 2: 1}
+
+
+# ----------------------------------------------------------- degrade plan
+def test_degrade_plan_accounting(setup):
+    spec, prof, bw, cap, vt = setup
+    horizon = 2e6
+    trace = generate_failure_trace(
+        spec, bw, horizon=horizon, seed=5, rate_per_array=2e-8,
+        repair_cycles=horizon / 4,
+    )
+    assert trace.n_failures > 0
+    plan = degrade_plan(spec, prof, bw, trace, spare_arrays=64.0)
+    assert plan.n_segments == len(plan.boundaries) + 1
+    assert plan.arrays_added[0] == 0 and plan.stall_cycles[0] == 0.0
+    assert 0.0 < plan.availability() <= 1.0
+    assert plan.spare_left >= 0.0
+    assert plan.replaced_arrays == pytest.approx(64.0 - plan.spare_left)
+    # stalls follow the drift book exactly: stall(added) where added > 0
+    for a, s in zip(plan.arrays_added, plan.stall_cycles):
+        assert s == (plan.drift.stall(int(a)) if a > 0 else 0.0)
+    # spares defend capacity: same trace without spares sits strictly lower
+    bare = degrade_plan(spec, prof, bw, trace)
+    assert bare.availability() < plan.availability()
+
+
+def test_degrade_plan_empty_trace_is_identity(setup):
+    spec, prof, bw, cap, vt = setup
+    trace = FailureTrace((), 1e6, 0, 0)
+    plan = degrade_plan(spec, prof, bw, trace)
+    assert plan.n_segments == 1 and plan.availability() == 1.0
+    np.testing.assert_array_equal(plan.flat_dups(0),
+                                  np.concatenate(bw.block_dups))
+
+
+# --------------------------------------------- cross-engine bit-identity
+@pytest.mark.parametrize("network", ["vgg11", "resnet18"])
+@pytest.mark.parametrize("engine", ["numpy", "jax"])
+def test_failure_replay_bit_identical_across_engines(profiled, network, engine):
+    """THE acceptance pin: one seeded failure trace (kills, repairs, spare
+    re-placement, reprogram stalls) replayed by the event calendar and the
+    segmented vtime kernel produces byte-equal completion times."""
+    if engine == "jax":
+        pytest.importorskip("jax")
+    spec, prof = profiled(network, n_images=1, sample_patches=64)
+    bw = allocate(spec, prof, "blockwise", spec.min_pes() * 2)
+    cap = simulate(spec, prof, bw, n_images=64).images_per_sec
+    times = _times(cap, n=60)
+    horizon = float(times[-1])
+    trace = generate_failure_trace(
+        spec, bw, horizon=horizon, seed=5, rate_per_array=2e-9,
+        repair_cycles=horizon / 4,
+    )
+    assert trace.n_failures > 0, "trace must actually exercise failures"
+    plan = degrade_plan(spec, prof, bw, trace, spare_arrays=32.0)
+    assert plan.n_segments > 1
+    ev = FabricSim(spec, prof, bw, seed=3, failures=plan).run(TraceReplay(times))
+    vt = VirtualTimeFabric(spec, prof)
+    res = run_trace_segments(
+        vt, list(plan.allocs), times, plan.boundaries, drift=plan.drift,
+        stream=False, seed=3, engine=engine,
+    )
+    np.testing.assert_array_equal(ev.completions, res.completions[0])
+
+
+def test_run_trace_failures_wrapper(setup):
+    """The one-call vtime entry point compiles the trace itself and equals
+    the hand-compiled plan replay."""
+    spec, prof, bw, cap, vt = setup
+    times = _times(cap, n=50)
+    horizon = float(times[-1])
+    trace = generate_failure_trace(
+        spec, bw, horizon=horizon, seed=5, rate_per_array=2e-9,
+    )
+    plan = degrade_plan(spec, prof, bw, trace)
+    a = run_trace_failures(
+        vt, prof, bw, TraceReplay(times), trace, stream=False, seed=3,
+        engine="numpy",
+    )
+    b = run_trace_segments(
+        vt, list(plan.allocs), times, plan.boundaries, drift=plan.drift,
+        stream=False, seed=3, engine="numpy",
+    )
+    np.testing.assert_array_equal(a.completions, b.completions)
+
+
+def test_failure_free_run_unchanged(setup):
+    """An empty failure trace is a no-op on the event engine: bit-identical
+    to a plain run (the failure machinery may not perturb healthy serving)."""
+    spec, prof, bw, cap, vt = setup
+    times = _times(cap, n=40)
+    plan = degrade_plan(
+        spec, prof, bw, FailureTrace((), float(times[-1]), 0, 0)
+    )
+    with_hooks = FabricSim(spec, prof, bw, seed=3, failures=plan).run(
+        TraceReplay(times)
+    )
+    plain = FabricSim(spec, prof, bw, seed=3).run(TraceReplay(times))
+    np.testing.assert_array_equal(with_hooks.completions, plain.completions)
+
+
+def test_failure_injection_requires_open_loop_and_blockwise(setup, profiled):
+    from repro.fabric import ClosedLoop
+
+    spec, prof, bw, cap, vt = setup
+    plan = degrade_plan(spec, prof, bw, FailureTrace((), 1e6, 0, 0))
+    with pytest.raises(ValueError, match="open-loop"):
+        FabricSim(spec, prof, bw, seed=0, failures=plan).run(ClosedLoop(10, 4))
+    wb = allocate(spec, prof, "weight_based", spec.min_pes() * 2)
+    with pytest.raises(ValueError, match="block-wise"):
+        FabricSim(spec, prof, wb, seed=0, failures=plan)
+
+
+# ------------------------------------------------- zero-survivor serving
+@pytest.fixture(scope="module")
+def outage(setup):
+    """Manual trajectory: the first block loses ALL replicas for the middle
+    third of the trace, then revives."""
+    spec, prof, bw, cap, vt = setup
+    times = _times(cap, n=60)
+    flat = np.concatenate(bw.block_dups)
+    dead = flat.copy()
+    dead[0] = 0
+    dead_alloc = Allocation(
+        bw.policy, None, split_block_dups(spec, dead),
+        bw.arrays_used, bw.arrays_total,
+    )
+    bounds = [float(times[20]) + 0.5, float(times[40]) + 0.5]
+    plan = degrade_plan_from_allocs(
+        spec, [bw, dead_alloc, bw], bounds, horizon=float(times[-1])
+    )
+    return spec, prof, bw, times, bounds, plan
+
+
+def test_zero_survivor_stall_until_revival(outage):
+    """Infinite patience: every request is served, but requests arriving
+    into the outage wait for the revival seam — their completions land at
+    or after it."""
+    spec, prof, bw, times, bounds, plan = outage
+    out = FabricSim(spec, prof, bw, seed=0, failures=plan).run(TraceReplay(times))
+    comp = np.asarray(out.completions)
+    assert not np.isnan(comp).any()
+    mid = (times > bounds[0]) & (times <= bounds[1])
+    assert comp[mid].min() >= bounds[1]
+    # post-revival requests complete; ordering within the stream is intact
+    assert comp[-1] > bounds[1]
+
+
+def test_zero_survivor_timeout_sheds(outage):
+    """Finite patience: outage-window requests exceed the timeout and are
+    shed (NaN completions, never forwarded); healthy-window requests are
+    untouched."""
+    spec, prof, bw, times, bounds, plan = outage
+    policy = RetryPolicy(timeout_cycles=(bounds[1] - bounds[0]) / 10)
+    out = FabricSim(
+        spec, prof, bw, seed=0, failures=plan, retry=policy
+    ).run(TraceReplay(times))
+    comp = np.asarray(out.completions)
+    shed = np.isnan(comp)
+    assert shed.any()
+    # every outage-window request facing a wait beyond the timeout is shed;
+    # one arriving within `timeout` of the revival seam rides it out
+    deep = (times > bounds[0]) & (times < bounds[1] - policy.timeout_cycles)
+    assert shed[deep].all()
+    assert not shed[times <= bounds[0]].any()
+    ref = FabricSim(spec, prof, bw, seed=0).run(TraceReplay(times))
+    pre = times <= bounds[0]
+    np.testing.assert_array_equal(comp[pre], ref.completions[pre])
+
+
+def test_retry_policy_validation():
+    with pytest.raises(ValueError, match="timeout_cycles"):
+        RetryPolicy(timeout_cycles=-1.0)
+    with pytest.raises(ValueError, match="max_retries"):
+        RetryPolicy(max_retries=-1)
+
+
+# ------------------------------------------------------ allocator spares
+def test_greedy_allocate_spare_fraction(vgg):
+    from repro.core.cim.simulate import _layer_patch_cycles, blockwise_units
+    from repro.core.alloc.greedy import greedy_allocate
+
+    spec, prof = vgg
+    cyc = _layer_patch_cycles(prof, True)
+    base_lat, cost = blockwise_units(spec, [c.mean(axis=0) for c in cyc])
+    full = greedy_allocate(base_lat, cost, 256.0)
+    held = greedy_allocate(base_lat, cost, 256.0, spare_fraction=0.25)
+    # default 0.0 is bit-identical to the pre-PR allocator
+    again = greedy_allocate(base_lat, cost, 256.0, spare_fraction=0.0)
+    np.testing.assert_array_equal(full.replicas, again.replicas)
+    assert held.spent <= 256.0 * 0.75
+    assert held.leftover >= 256.0 * 0.25  # the reserve comes back untouched
+    assert held.spent + held.leftover == pytest.approx(256.0)
+    with pytest.raises(ValueError, match="spare_fraction"):
+        greedy_allocate(base_lat, cost, 256.0, spare_fraction=1.5)
+
+
+def test_greedy_release_frees_cheapest_latency(vgg):
+    from repro.core.cim.simulate import _layer_patch_cycles, blockwise_units
+    from repro.core.alloc.greedy import greedy_allocate, greedy_release
+
+    spec, prof = vgg
+    cyc = _layer_patch_cycles(prof, True)
+    base_lat, cost = blockwise_units(spec, [c.mean(axis=0) for c in cyc])
+    grown = greedy_allocate(base_lat, cost, 512.0)
+    rel = greedy_release(base_lat, cost, 128.0, replicas=grown.replicas)
+    freed = float((grown.replicas - rel.replicas) @ cost)
+    assert freed >= 128.0 and rel.spent == -freed
+    assert np.all(rel.replicas >= 1)
+    # release everything releasable: lands on exactly one copy per unit
+    total = float((grown.replicas - 1) @ cost)
+    floor = greedy_release(base_lat, cost, total * 2, replicas=grown.replicas)
+    np.testing.assert_array_equal(floor.replicas, np.ones_like(grown.replicas))
+
+
+def test_spares_per_chip():
+    from repro.core.cim.topology import FabricTopology
+
+    topo = FabricTopology(pes_per_chip=32, n_chips=4, arrays_per_pe=8)
+    assert topo.arrays_per_chip == 256
+    assert topo.spares_per_chip(0.1) == 25
+    assert topo.spares_per_chip(0.0) == 0
+    with pytest.raises(ValueError, match="spare_fraction"):
+        topo.spares_per_chip(-0.1)
+
+
+# ------------------------------------------------------------- brownout
+def test_brownout_plan():
+    from repro.serve.scheduler import brownout_plan
+
+    frac = brownout_plan(
+        offered_rps=np.array([10.0, 100.0, 100.0, 0.0]),
+        capacity_rps=np.array([50.0, 50.0, 200.0, 50.0]),
+        p99_cycles=np.array([1e3, 1e3, 4e3, 1e3]),
+        slo_cycles=2e3,
+    )
+    assert frac[0] == 1.0          # healthy: fully admitted
+    assert frac[1] == pytest.approx(0.5)   # over capacity: shed to stability
+    assert frac[2] == pytest.approx(0.5)   # SLO-violating tail: shed to SLO
+    assert frac[3] == 1.0          # no traffic: no shedding
+    lo = brownout_plan(
+        offered_rps=np.array([1e9]), capacity_rps=np.array([1.0]),
+        p99_cycles=np.array([1.0]), slo_cycles=1e3,
+    )
+    assert lo[0] == pytest.approx(0.05)  # floor: never a full blackout
+    with pytest.raises(ValueError, match="slo_cycles"):
+        brownout_plan(np.array([1.0]), np.array([1.0]), np.array([1.0]), 0.0)
+
+
+# ------------------------------------------------------------ DSE sweep
+def test_fault_objectives_wiring():
+    """FAULT_OBJECTIVES resolve against FaultSweepResult columns (plus the
+    virtual spare_fraction/rate columns) without running a sweep."""
+    from repro.dse import FAULT_OBJECTIVES, pareto_mask
+    from repro.dse.faults import FaultPoint, FaultSweepResult
+
+    pts = [
+        FaultPoint("vgg11", 0.0, 1e-8, 8),
+        FaultPoint("vgg11", 0.2, 1e-8, 8),
+    ]
+    res = FaultSweepResult(
+        points=pts,
+        availability=np.array([0.9, 1.0]),
+        p50_cycles=np.array([10.0, 8.0]),
+        p99_cycles=np.array([30.0, 20.0]),
+        arrays_used=np.array([100, 90]),
+        arrays_total=np.array([128, 128]),
+        spare_arrays=np.array([0, 25]),
+        n_killed=np.array([5, 5]),
+        n_repaired=np.array([0, 0]),
+        total_stall_cycles=np.array([0.0, 2048.0]),
+        elapsed_s=0.0,
+    )
+    names = tuple(n for n, _ in FAULT_OBJECTIVES)
+    vals = res.objectives(names)
+    assert vals.shape == (2, 3)
+    np.testing.assert_array_equal(vals[:, 0], res.availability)
+    mask = pareto_mask(vals, [m for _, m in FAULT_OBJECTIVES])
+    assert mask[1] and not mask[0]  # point 1 dominates on all three
+    extra = res.objectives(("spare_fraction", "rate_per_array"))
+    np.testing.assert_allclose(extra[:, 0], [0.0, 0.2])
+    assert res.rows()[1]["spare_arrays"] == 25
+
+
+@pytest.mark.slow
+def test_fault_sweep_and_frontier(profiled):
+    from repro.dse import FAULT_OBJECTIVES, fault_grid, pareto_frontier, run_fault_sweep
+
+    pts = fault_grid(networks=("vgg11",), spare_fractions=(0.0, 0.2), rates=(5e-9,))
+    assert len(pts) == 2
+    res = run_fault_sweep(
+        pts, n_requests=40, profile_images=1, sample_patches=64, engine="numpy"
+    )
+    assert np.all((res.availability >= 0.0) & (res.availability <= 1.0))
+    # spares buy availability at equal silicon
+    assert res.availability[1] >= res.availability[0]
+    assert res.spare_arrays[1] > 0 and res.spare_arrays[0] == 0
+    np.testing.assert_array_equal(res.arrays_total[0], res.arrays_total[1])
+    idx = pareto_frontier(res, FAULT_OBJECTIVES)
+    assert len(idx) >= 1
+    rows = res.rows()
+    assert rows[0]["availability"] == pytest.approx(float(res.availability[0]))
+
+
+# --------------------------------------------------- training-side bridge
+def test_fault_injector_from_trace():
+    from repro.runtime.fault import FaultInjector
+
+    t = FailureTrace(
+        (_ev(100.0, 0, 0), _ev(260.0, 1, 0), _ev(300.0, 0, 0, repair=True)),
+        horizon=1000.0, seed=0, n_units=2,
+    )
+    inj = FaultInjector.from_trace(t, cycles_per_step=250.0)
+    assert inj.fail_budget == {0: 1, 1: 1}  # repairs do not raise
+    with pytest.raises(RuntimeError, match="injected failure at step 0"):
+        inj(0)
+    inj(0)  # budget exhausted: second pass is clean

@@ -11,7 +11,10 @@ Three contracts, each pinned bit-for-bit where the design promises it:
     stream sketch from the identical kernel;
   * segmented replay with NO allocation change is a no-op (bit-identical to
     the unsegmented run, stream and materializing), growth charges exactly
-    ``DriftConfig.stall`` at each boundary, and shrinking is rejected.
+    ``DriftConfig.stall`` at each boundary, and shrink seams (the failure
+    PR's re-allocation downward) kill the largest-virtual-time lanes —
+    pinned bit-identical to the event engine replaying the same trajectory
+    via ``degrade_plan_from_allocs`` + ``FabricSim(failures=...)``.
 """
 
 import numpy as np
@@ -285,16 +288,71 @@ def test_segmented_stream_engines_and_padding_agree(setup, growth):
     np.testing.assert_array_equal(st.makespan, mt.makespan)
 
 
-def test_segmented_rejects_shrink_and_closed_loop(setup, growth):
+def test_segmented_rejects_closed_loop_and_bad_boundaries(setup, growth):
     spec, prof, bw, cap, vt = setup
     times = np.linspace(0.0, 1e6, 10)
-    with pytest.raises(ValueError, match="growth-only"):
-        run_trace_segments(
-            vt, [growth[1], growth[0]], times, [5e5], engine="numpy"
-        )
     with pytest.raises(ValueError, match="open-loop"):
         run_trace_segments(
             vt, [bw, bw], ClosedLoop(10, 4), [5e5], engine="numpy"
         )
     with pytest.raises(ValueError, match="boundaries"):
         run_trace_segments(vt, [bw, bw, bw], times, [5e5], engine="numpy")
+
+
+@pytest.mark.parametrize("engine", ["numpy", "jax"])
+def test_segmented_shrink_matches_event_engine(setup, growth, engine):
+    """A shrink seam (grown -> base allocation) is legal and bit-identical
+    across engines: the vtime kernel retires the largest-free-time lanes to
+    +inf, the event engine pops the same multiset via ``ServerPool.kill`` —
+    both driven by one ``degrade_plan_from_allocs`` trajectory."""
+    if engine == "jax":
+        pytest.importorskip("jax")
+    from repro.fabric import degrade_plan_from_allocs
+
+    spec, prof, bw, cap, vt = setup
+    times = arrival_times(_open_proc(cap, n=50))
+    bounds = [float(times[20]) + 0.5]
+    segs = [growth[1], growth[0]]
+    res = run_trace_segments(
+        vt, segs, times, bounds, seed=4, engine=engine, stream=False, pad_to=8
+    )
+    # pure shrink reprograms nothing: no arrays added, no stall charged
+    assert all(s.arrays_added[0] == 0 for s in res.segments)
+    assert res.total_stall_cycles.max() == 0.0
+    plan = degrade_plan_from_allocs(
+        spec, segs, bounds, horizon=float(times[-1])
+    )
+    ref = FabricSim(spec, prof, growth[1], seed=4, failures=plan).run(
+        TraceReplay(times)
+    )
+    np.testing.assert_array_equal(res.completions[0], ref.completions)
+
+
+def test_segmented_shrink_to_identical_is_noop(setup, growth):
+    """A seam whose 'shrink' lands back on the very same dups is invisible:
+    bit-identical to the unsegmented replay (the degenerate case separating
+    'allocation changed' from 'boundary exists')."""
+    spec, prof, bw, cap, vt = setup
+    times = arrival_times(_open_proc(cap, n=40))
+    bounds = [float(times[15]) + 0.5]
+    res = run_trace_segments(
+        vt, [growth[1], growth[1]], times, bounds, seed=4, engine="numpy",
+        stream=False, pad_to=8,
+    )
+    ref = vt.run_batch([growth[1]], TraceReplay(times), seed=4, engine="numpy")
+    np.testing.assert_array_equal(res.completions, ref.completions)
+
+
+def test_growth_plan_negative_budget_shrinks(setup):
+    """segment_growth_plan accepts negative budgets: greedy_release frees
+    the lowest-cost-per-latency replicas, never below one copy per block."""
+    spec, prof, bw, cap, vt = setup
+    plan = segment_growth_plan(spec, prof, bw, budgets=[64, -64])
+    used = [a.arrays_used for a in plan]
+    assert used[1] > used[0] and used[2] < used[1]
+    for d in plan[2].block_dups:
+        assert np.all(np.asarray(d) >= 1)
+    # release frees whole replicas, so it may overshoot the request by at
+    # most one replica's cost — never more
+    max_cost = max(l.arrays_per_block for l in spec.layers)
+    assert used[1] - used[2] >= 64 and used[1] - used[2] < 64 + max_cost
